@@ -1,0 +1,244 @@
+"""Benchmark harness (deliverable d) — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  fig5_reproducibility   native vs in-FLARE round time; derived = bitwise match
+  fig6_metric_streaming  per-scalar streaming latency; derived = points stored
+  s41_reliable_overhead  reliable exchange at 0/10/30% drop; derived = retries
+  s31_multi_job          3 concurrent vs serial jobs; derived = speedup
+  strategies_convergence FedAvg/FedAdam/FedProx final loss (ecosystem claim)
+  secagg_overhead        SecAgg vs plain round; derived = max param delta
+  kernel_*               Pallas kernels (interpret mode) vs jnp oracle
+
+Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import numpy as np
+
+
+def _t(fn, n=1):
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    return (time.perf_counter() - t0) / n * 1e6, out
+
+
+def bench_fig5_reproducibility(quick=False):
+    from repro.core import run_in_flare, run_native
+    from repro.fl import FedAvg, ServerApp, ServerConfig
+    from repro.fl.quickstart import make_client_app
+    from repro.runtime import FlareRuntime
+
+    sites = ["site-1", "site-2", "site-3"]
+    rounds = 2 if quick else 3
+
+    def app():
+        return ServerApp(ServerConfig(num_rounds=rounds, round_timeout=120),
+                         FedAvg())
+
+    us_native, h1 = _t(lambda: run_native(app(), lambda s: make_client_app(s),
+                                          sites))
+    rt = FlareRuntime()
+    for s in sites:
+        rt.provision_site(s)
+    us_flare, h2 = _t(lambda: run_in_flare(rt, app(),
+                                           lambda s: make_client_app(s), sites))
+    rt.shutdown()
+    match = (h1.losses() == h2.losses() and all(
+        np.array_equal(a, b) for a, b in zip(h1.final_parameters,
+                                             h2.final_parameters)))
+    print(f"fig5_native_round,{us_native/rounds:.0f},loss={h1.losses()[-1][1]:.4f}")
+    print(f"fig5_flare_round,{us_flare/rounds:.0f},bitwise_match={match}")
+    return match
+
+
+def bench_fig6_metric_streaming(quick=False):
+    from repro.core import run_in_flare
+    from repro.fl import FedAvg, ServerApp, ServerConfig
+    from repro.fl.client import ClientApp
+    from repro.fl.quickstart import QuickstartClient
+    from repro.runtime import FlareRuntime
+
+    sites = ["site-1", "site-2", "site-3"]
+    rt = FlareRuntime()
+    for s in sites:
+        rt.provision_site(s)
+
+    def client_app_fn(site):
+        def with_ctx(ctx):
+            w = ctx.summary_writer()
+            return ClientApp(lambda cid: QuickstartClient(site, writer=w)
+                             .to_client())
+        return with_ctx
+
+    t0 = time.perf_counter()
+    run_in_flare(rt, ServerApp(ServerConfig(num_rounds=2, round_timeout=120),
+                               FedAvg()), client_app_fn, sites)
+    dt = time.perf_counter() - t0
+    mc = rt.metrics(next(iter(rt._jobs)))
+    points = sum(len(mc.series(t)) for t in mc.tags())
+    ntags = len(mc.tags())
+    rt.shutdown()
+    print(f"fig6_metric_streaming,{dt/max(points,1)*1e6:.0f},points={points}"
+          f";tags={ntags}")
+
+
+def bench_s41_reliable_overhead(quick=False):
+    from repro.runtime.reliable import ReliableMessenger
+    from repro.runtime.transport import FaultSpec, Network
+
+    n = 50 if quick else 200
+    payload = b"x" * 65536
+    for drop in (0.0, 0.1, 0.3):
+        net = Network(FaultSpec(drop_prob=drop, seed=11))
+        a = ReliableMessenger(net, "a", retry_interval=0.005,
+                              default_timeout=30.0)
+        b = ReliableMessenger(net, "b", retry_interval=0.005,
+                              default_timeout=30.0)
+        b.register_handler("w", lambda m: m.payload[:16])
+        t0 = time.perf_counter()
+        for i in range(n):
+            a.request("b", "w", payload)
+        dt = (time.perf_counter() - t0) / n * 1e6
+        retries = net.stats["sent"] - 2 * n
+        print(f"s41_reliable_drop{int(drop*100)},{dt:.0f},"
+              f"extra_msgs={max(retries,0)};dropped={net.stats['dropped']}")
+        net.close()
+
+
+def bench_s31_multi_job(quick=False):
+    from repro.runtime import FlareRuntime, JobSpec
+
+    class SJob:
+        def run(self, ctx):
+            out = [ctx.request(s, "work", b"1") for s in sorted(ctx.sites)]
+            time.sleep(0.2)
+            return len(out)
+
+    class CJob:
+        def __init__(self, site):
+            pass
+
+        def run(self, ctx):
+            ctx.register_handler("work", lambda m: b"done")
+            ctx.stop_event.wait()
+
+    def run_jobs(rt, concurrent):
+        admin = rt.provisioner.issue("admin", "admin")
+        res = {"gpu": 0.25} if concurrent else {"gpu": 1.0}
+        specs = [JobSpec(name=f"j{i}", server_app_fn=lambda: SJob(),
+                         client_app_fn=lambda s: CJob(s), min_sites=2,
+                         resources=res) for i in range(3)]
+        t0 = time.perf_counter()
+        ids = [rt.submit_job(sp, admin) for sp in specs]
+        for j in ids:
+            rec = rt.wait(j, timeout=60)
+            assert rec.status.value == "COMPLETED", rec.error
+        return time.perf_counter() - t0
+
+    rt = FlareRuntime()
+    for s in ("site-1", "site-2"):
+        rt.provision_site(s)
+    t_serial = run_jobs(rt, concurrent=False)
+    t_conc = run_jobs(rt, concurrent=True)
+    rt.shutdown()
+    print(f"s31_multijob_serial,{t_serial*1e6:.0f},jobs=3")
+    print(f"s31_multijob_concurrent,{t_conc*1e6:.0f},"
+          f"speedup={t_serial/max(t_conc,1e-9):.2f}x")
+
+
+def bench_strategies(quick=False):
+    from repro.core import run_native
+    from repro.fl import ServerApp, ServerConfig, make_strategy
+    from repro.fl.quickstart import make_client_app
+
+    sites = ["site-1", "site-2", "site-3"]
+    rounds = 2 if quick else 4
+    for name in ("fedavg", "fedadam", "fedprox", "fedmedian"):
+        app = ServerApp(ServerConfig(num_rounds=rounds, round_timeout=120),
+                        make_strategy(name))
+        us, h = _t(lambda: run_native(app, lambda s: make_client_app(
+            s, lr=0.02, epochs=1, skew=0.2), sites))
+        print(f"strategy_{name},{us/rounds:.0f},"
+              f"final_loss={h.losses()[-1][1]:.4f}")
+
+
+def bench_secagg(quick=False):
+    from repro.core import run_native
+    from repro.fl import (FedAvg, SecAggFedAvg, SecAggMod, ServerApp,
+                          ServerConfig)
+    from repro.fl.quickstart import make_client_app
+
+    sites = ["site-1", "site-2", "site-3"]
+
+    def seed_fn(a, b):
+        import zlib
+        lo, hi = sorted([a, b])
+        return zlib.crc32(f"{lo}|{hi}".encode())
+
+    us_plain, h1 = _t(lambda: run_native(
+        ServerApp(ServerConfig(num_rounds=2, round_timeout=120), FedAvg()),
+        lambda s: make_client_app(s), sites))
+    us_sec, h2 = _t(lambda: run_native(
+        ServerApp(ServerConfig(num_rounds=2, round_timeout=120),
+                  SecAggFedAvg()),
+        lambda s: make_client_app(s, mods=[SecAggMod(
+            site=s, peers=sites, pairwise_seed_fn=seed_fn)]), sites))
+    delta = max(float(np.abs(a.astype(np.float64) - b.astype(np.float64)).max())
+                for a, b in zip(h1.final_parameters, h2.final_parameters))
+    print(f"secagg_plain_round,{us_plain/2:.0f},baseline")
+    print(f"secagg_masked_round,{us_sec/2:.0f},max_param_delta={delta:.2e}")
+
+
+def bench_kernels(quick=False):
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 1, 256, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32) / 6
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    us, _ = _t(lambda: ops.flash_attention(q, k, v, block_q=64,
+                                           block_kv=64).block_until_ready(), 3)
+    fl = 4 * B * S * S * H * hd / 2
+    print(f"kernel_flash_attention,{us:.0f},interpret_mode;flops={fl:.3g}")
+
+    x = jnp.asarray(rng.normal(size=(1 << 16,)), jnp.float32)
+    masks = jnp.asarray(rng.integers(-2**31, 2**31 - 1, size=(3, 1 << 16)),
+                        jnp.int32)
+    us, _ = _t(lambda: ops.secagg_mask(x, masks, 3.0).block_until_ready(), 3)
+    print(f"kernel_secagg_mask,{us:.0f},interpret_mode;bytes={x.nbytes*4}")
+
+    a = jnp.asarray(rng.uniform(0.9, 0.999, size=(2, 256, 128)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(2, 256, 128)), jnp.float32)
+    h0 = jnp.zeros((2, 128), jnp.float32)
+    us, _ = _t(lambda: ops.rglru_scan(a, b, h0)[0].block_until_ready(), 3)
+    print(f"kernel_rglru_scan,{us:.0f},interpret_mode;steps=256")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    ok = bench_fig5_reproducibility(args.quick)
+    bench_fig6_metric_streaming(args.quick)
+    bench_s41_reliable_overhead(args.quick)
+    bench_s31_multi_job(args.quick)
+    bench_strategies(args.quick)
+    bench_secagg(args.quick)
+    bench_kernels(args.quick)
+    if not ok:
+        print("ERROR: fig5 reproducibility failed", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

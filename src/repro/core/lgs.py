@@ -1,0 +1,34 @@
+"""Local gRPC Server analogue (paper Fig. 4, client side).
+
+In the paper, each Flower SuperNode is re-pointed at a *Local gRPC Server*
+(LGS) inside the FLARE client instead of the remote SuperLink; the LGS
+forwards each gRPC unary call over FLARE's ReliableMessage to the FLARE
+server, whose LGC completes the call against the real SuperLink.
+
+Here the LGS is a :class:`FleetConnection` whose ``unary`` serializes the
+call and sends it through the Job-Network (hops 1–3 of the six-hop path);
+the response retraces hops 4–6.  The SuperNode is *unchanged* — it just
+received a different connection object, exactly like pointing gRPC at
+localhost.
+"""
+from __future__ import annotations
+
+import msgpack
+
+from repro.core.superlink import FleetConnection
+from repro.runtime.ccp import JobContext
+
+
+class LGSConnection(FleetConnection):
+    def __init__(self, ctx: JobContext):
+        self.ctx = ctx
+
+    def unary(self, method: str, request: bytes) -> bytes:
+        payload = msgpack.packb({"m": method, "q": request}, use_bin_type=True)
+        # hop 1: SuperNode -> LGS (this call); hops 2-3: FLARE client ->
+        # FLARE server (reliable, SCP-relayed) -> LGC
+        resp = self.ctx.request("server", "flower/unary", payload)
+        d = msgpack.unpackb(resp, raw=False)
+        if d.get("e"):
+            raise RuntimeError(f"LGC error: {d['e']}")
+        return d["r"]

@@ -1,0 +1,162 @@
+"""Flower Next long-running components (paper §3.2, Fig. 3).
+
+:class:`SuperLink` decouples the communication layer from the ServerApp:
+the ServerApp drives rounds through the Driver API, SuperNodes pull TaskIns
+and push TaskRes through the Fleet API.  Both APIs are **byte-level,
+gRPC-shaped** (unary method name + request bytes -> response bytes), so a
+connection can be the in-process :class:`NativeConnection` *or* the
+FLARE-routed LGS/LGC pair — with identical semantics (Fig. 5 claim).
+
+Fleet methods:   register, pull_task_ins, push_task_res
+"""
+from __future__ import annotations
+
+import itertools
+import queue
+import threading
+import time
+import uuid
+from typing import Callable, Dict, List, Optional, Tuple
+
+import msgpack
+
+from repro.fl.client import ClientApp
+from repro.fl.server import Driver
+
+
+class SuperLink:
+    """Hub: per-node task queues + result store. Thread-safe."""
+
+    def __init__(self):
+        self._task_queues: Dict[str, "queue.Queue[Tuple[str, bytes]]"] = {}
+        self._results: Dict[str, bytes] = {}
+        self._results_cv = threading.Condition()
+        self._nodes: Dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ fleet API
+    def fleet_unary(self, method: str, request: bytes) -> bytes:
+        if method == "register":
+            node_id = request.decode()
+            with self._lock:
+                self._nodes[node_id] = time.time()
+                self._task_queues.setdefault(node_id, queue.Queue())
+            return b"OK"
+        if method == "pull_task_ins":
+            node_id = request.decode()
+            with self._lock:
+                q = self._task_queues.setdefault(node_id, queue.Queue())
+            try:
+                task_id, task = q.get_nowait()
+                return msgpack.packb({"id": task_id, "task": task},
+                                     use_bin_type=True)
+            except queue.Empty:
+                return msgpack.packb({"id": "", "task": b""}, use_bin_type=True)
+        if method == "push_task_res":
+            d = msgpack.unpackb(request, raw=False)
+            with self._results_cv:
+                self._results[d["id"]] = d["res"]
+                self._results_cv.notify_all()
+            return b"OK"
+        raise ValueError(f"unknown fleet method {method!r}")
+
+    # ------------------------------------------------------------ driver API
+    def node_ids(self) -> List[str]:
+        with self._lock:
+            return sorted(self._nodes)
+
+    def push_task_ins(self, node_id: str, task: bytes) -> str:
+        task_id = uuid.uuid4().hex
+        with self._lock:
+            q = self._task_queues.setdefault(node_id, queue.Queue())
+        q.put((task_id, task))
+        return task_id
+
+    def pull_task_res(self, task_id: str, timeout: float) -> bytes:
+        deadline = time.monotonic() + timeout
+        with self._results_cv:
+            while task_id not in self._results:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise TimeoutError(f"task {task_id} timed out")
+                self._results_cv.wait(min(remaining, 0.1))
+            return self._results.pop(task_id)
+
+
+class SuperLinkDriver(Driver):
+    """Driver API implementation over a SuperLink instance."""
+
+    def __init__(self, superlink: SuperLink, expected_nodes: int = 0,
+                 join_timeout: float = 30.0):
+        self.link = superlink
+        if expected_nodes:
+            deadline = time.monotonic() + join_timeout
+            while (len(self.link.node_ids()) < expected_nodes
+                   and time.monotonic() < deadline):
+                time.sleep(0.005)
+
+    def node_ids(self) -> List[str]:
+        return self.link.node_ids()
+
+    def send_and_receive(self, tasks: Dict[str, bytes],
+                         timeout: float) -> Dict[str, bytes]:
+        ids = {node: self.link.push_task_ins(node, t)
+               for node, t in sorted(tasks.items())}
+        return {node: self.link.pull_task_res(tid, timeout)
+                for node, tid in ids.items()}
+
+
+# ---------------------------------------------------------------------------
+# connections (the pluggable wire)
+# ---------------------------------------------------------------------------
+class FleetConnection:
+    """gRPC-shaped unary interface a SuperNode talks through."""
+
+    def unary(self, method: str, request: bytes) -> bytes:
+        raise NotImplementedError
+
+
+class NativeConnection(FleetConnection):
+    """Direct in-process connection (Flower running 'alone')."""
+
+    def __init__(self, superlink: SuperLink):
+        self.link = superlink
+
+    def unary(self, method: str, request: bytes) -> bytes:
+        return self.link.fleet_unary(method, request)
+
+
+class SuperNode:
+    """Long-running client host: polls for tasks, runs the ClientApp."""
+
+    def __init__(self, node_id: str, client_app: ClientApp,
+                 connection: FleetConnection, poll_interval: float = 0.005):
+        self.node_id = node_id
+        self.app = client_app
+        self.conn = connection
+        self.poll_interval = poll_interval
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    def start(self) -> None:
+        self.conn.unary("register", self.node_id.encode())
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"supernode-{self.node_id}")
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            resp = self.conn.unary("pull_task_ins", self.node_id.encode())
+            d = msgpack.unpackb(resp, raw=False)
+            if not d["id"]:
+                time.sleep(self.poll_interval)
+                continue
+            res = self.app.handle(d["task"], cid=self.node_id)
+            self.conn.unary("push_task_res",
+                            msgpack.packb({"id": d["id"], "res": res},
+                                          use_bin_type=True))
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLMDataset, make_batch_iterator  # noqa: F401
+from repro.data.partition import dirichlet_partition, iid_partition  # noqa: F401
+from repro.data.loader import FederatedDataLoader  # noqa: F401

@@ -1,0 +1,118 @@
+"""Client-side app layer (Flower analogue, paper Listing 2).
+
+    class MyClient(NumPyClient):
+        def fit(self, parameters, config): ...
+        def evaluate(self, parameters, config): ...
+
+    def client_fn(cid): return MyClient(cid).to_client()
+    app = ClientApp(client_fn=client_fn, mods=[DPMod(...)])
+
+``ClientApp.handle(bytes) -> bytes`` is the entire transport contract —
+which is what lets the SAME app object run natively or inside the FLARE
+runtime with no code changes (the paper's core claim).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fl.messages import (EvaluateIns, EvaluateRes, FitIns, FitRes,
+                               TaskIns, TaskRes, decode_evaluate_ins,
+                               decode_fit_ins, decode_task_ins,
+                               encode_evaluate_res, encode_fit_res,
+                               encode_task_ins, encode_task_res,
+                               arrays_to_bytes)
+
+NDArrays = List[np.ndarray]
+
+
+class NumPyClient:
+    """Subclass and override fit / evaluate / get_parameters."""
+
+    context: Dict[str, Any] = {}
+
+    def get_parameters(self, config: Dict[str, Any]) -> NDArrays:
+        raise NotImplementedError
+
+    def fit(self, parameters: NDArrays, config: Dict[str, Any]
+            ) -> Tuple[NDArrays, int, Dict[str, Any]]:
+        raise NotImplementedError
+
+    def evaluate(self, parameters: NDArrays, config: Dict[str, Any]
+                 ) -> Tuple[float, int, Dict[str, Any]]:
+        raise NotImplementedError
+
+    def to_client(self) -> "Client":
+        return Client(self)
+
+
+class Client:
+    """Byte-level client wrapper."""
+
+    def __init__(self, numpy_client: NumPyClient):
+        self.np_client = numpy_client
+
+    def handle_fit(self, ins: FitIns) -> FitRes:
+        params, n, metrics = self.np_client.fit(ins.parameters, ins.config)
+        return FitRes(params, n, metrics)
+
+    def handle_evaluate(self, ins: EvaluateIns) -> EvaluateRes:
+        loss, n, metrics = self.np_client.evaluate(ins.parameters, ins.config)
+        return EvaluateRes(loss, n, metrics)
+
+
+# Mod signature: (task_ins, call_next) -> task_res  — Flower "mods" chain.
+ModFn = Callable[[TaskIns, Callable[[TaskIns], TaskRes]], TaskRes]
+
+
+class ClientApp:
+    """Owns client_fn + the mod chain; transport-agnostic."""
+
+    def __init__(self, client_fn: Callable[[str], Client],
+                 mods: Optional[Sequence[ModFn]] = None):
+        self.client_fn = client_fn
+        self.mods = list(mods or [])
+        self._clients: Dict[str, Client] = {}
+
+    def _client(self, cid: str) -> Client:
+        if cid not in self._clients:
+            self._clients[cid] = self.client_fn(cid)
+        return self._clients[cid]
+
+    # -------------------------------------------------------------- handle
+    def handle(self, task_ins_bytes: bytes, cid: str = "0") -> bytes:
+        task = decode_task_ins(task_ins_bytes)
+
+        def call(t: TaskIns) -> TaskRes:
+            client = self._client(cid)
+            try:
+                if t.task_type == "fit":
+                    res = client.handle_fit(decode_fit_ins(t.payload))
+                    return TaskRes("fit", t.round, encode_fit_res(res),
+                                   task_id=t.task_id)
+                if t.task_type == "evaluate":
+                    res = client.handle_evaluate(decode_evaluate_ins(t.payload))
+                    return TaskRes("evaluate", t.round,
+                                   encode_evaluate_res(res), task_id=t.task_id)
+                if t.task_type == "get_parameters":
+                    arrays = client.np_client.get_parameters({})
+                    return TaskRes("get_parameters", t.round,
+                                   arrays_to_bytes(arrays), task_id=t.task_id)
+                return TaskRes(t.task_type, t.round, b"",
+                               task_id=t.task_id, error="unknown task type")
+            except Exception as e:  # noqa: BLE001
+                return TaskRes(t.task_type, t.round, b"", task_id=t.task_id,
+                               error=repr(e))
+
+        chain = call
+        for mod in reversed(self.mods):
+            chain = _bind_mod(mod, chain)
+        return encode_task_res(chain(task))
+
+
+def _bind_mod(mod: ModFn, nxt: Callable[[TaskIns], TaskRes]):
+    def bound(task: TaskIns) -> TaskRes:
+        return mod(task, nxt)
+    return bound

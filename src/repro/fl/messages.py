@@ -1,0 +1,181 @@
+"""Wire format for the Flower-analogue app layer.
+
+Everything that crosses a process/transport boundary is **bytes** encoded
+with msgpack: numpy arrays travel as (dtype, shape, raw-buffer) triples, so
+the encoding is exact (bitwise) — a prerequisite for the paper's Fig. 5
+reproducibility claim (native vs. in-FLARE must match exactly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+import jax
+
+NDArrays = List[np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# array codec
+# ---------------------------------------------------------------------------
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bf16/fp8 extension dtypes (jax dependency)
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _pack_array(a: np.ndarray) -> Dict[str, Any]:
+    a = np.ascontiguousarray(a)
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_array(d: Dict[str, Any]) -> np.ndarray:
+    return np.frombuffer(d["data"], dtype=_np_dtype(d["dtype"])) \
+        .reshape(d["shape"]).copy()
+
+
+def arrays_to_bytes(arrays: NDArrays) -> bytes:
+    return msgpack.packb([_pack_array(a) for a in arrays], use_bin_type=True)
+
+
+def bytes_to_arrays(b: bytes) -> NDArrays:
+    return [_unpack_array(d) for d in msgpack.unpackb(b, raw=False)]
+
+
+# pytree <-> flat NDArrays (clients keep the treedef; the wire sees arrays)
+def params_to_arrays(params) -> NDArrays:
+    return [np.asarray(x) for x in jax.tree.leaves(params)]
+
+
+def arrays_to_params(arrays: NDArrays, like):
+    leaves, treedef = jax.tree.flatten(like)
+    assert len(leaves) == len(arrays), (len(leaves), len(arrays))
+    import jax.numpy as jnp
+
+    return jax.tree.unflatten(
+        treedef, [jnp.asarray(a, dtype=l.dtype) for a, l in zip(arrays, leaves)])
+
+
+# ---------------------------------------------------------------------------
+# task messages
+# ---------------------------------------------------------------------------
+@dataclass
+class FitIns:
+    parameters: NDArrays
+    config: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class FitRes:
+    parameters: NDArrays
+    num_examples: int
+    metrics: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class EvaluateIns:
+    parameters: NDArrays
+    config: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class EvaluateRes:
+    loss: float
+    num_examples: int
+    metrics: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class TaskIns:
+    task_type: str              # "fit" | "evaluate" | "get_parameters"
+    round: int
+    payload: bytes              # encoded FitIns / EvaluateIns
+    task_id: str = ""
+    group_id: str = ""
+
+
+@dataclass
+class TaskRes:
+    task_type: str
+    round: int
+    payload: bytes              # encoded FitRes / EvaluateRes
+    task_id: str = ""
+    error: str = ""
+
+
+def _enc_config(cfg: Dict[str, Any]) -> Dict[str, Any]:
+    out = {}
+    for k, v in cfg.items():
+        if isinstance(v, (int, float, str, bool, bytes)):
+            out[k] = v
+        else:
+            raise TypeError(f"config value {k}={type(v)} not wire-safe")
+    return out
+
+
+def encode_fit_ins(x: FitIns) -> bytes:
+    return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
+                          "c": _enc_config(x.config)}, use_bin_type=True)
+
+
+def decode_fit_ins(b: bytes) -> FitIns:
+    d = msgpack.unpackb(b, raw=False)
+    return FitIns([_unpack_array(a) for a in d["p"]], d["c"])
+
+
+def encode_fit_res(x: FitRes) -> bytes:
+    return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
+                          "n": x.num_examples, "m": _enc_config(x.metrics)},
+                         use_bin_type=True)
+
+
+def decode_fit_res(b: bytes) -> FitRes:
+    d = msgpack.unpackb(b, raw=False)
+    return FitRes([_unpack_array(a) for a in d["p"]], d["n"], d["m"])
+
+
+def encode_evaluate_ins(x: EvaluateIns) -> bytes:
+    return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
+                          "c": _enc_config(x.config)}, use_bin_type=True)
+
+
+def decode_evaluate_ins(b: bytes) -> EvaluateIns:
+    d = msgpack.unpackb(b, raw=False)
+    return EvaluateIns([_unpack_array(a) for a in d["p"]], d["c"])
+
+
+def encode_evaluate_res(x: EvaluateRes) -> bytes:
+    return msgpack.packb({"l": float(x.loss), "n": x.num_examples,
+                          "m": _enc_config(x.metrics)}, use_bin_type=True)
+
+
+def decode_evaluate_res(b: bytes) -> EvaluateRes:
+    d = msgpack.unpackb(b, raw=False)
+    return EvaluateRes(d["l"], d["n"], d["m"])
+
+
+def encode_task_ins(t: TaskIns) -> bytes:
+    return msgpack.packb({"t": t.task_type, "r": t.round, "p": t.payload,
+                          "id": t.task_id, "g": t.group_id}, use_bin_type=True)
+
+
+def decode_task_ins(b: bytes) -> TaskIns:
+    d = msgpack.unpackb(b, raw=False)
+    return TaskIns(d["t"], d["r"], d["p"], d["id"], d["g"])
+
+
+def encode_task_res(t: TaskRes) -> bytes:
+    return msgpack.packb({"t": t.task_type, "r": t.round, "p": t.payload,
+                          "id": t.task_id, "e": t.error}, use_bin_type=True)
+
+
+def decode_task_res(b: bytes) -> TaskRes:
+    d = msgpack.unpackb(b, raw=False)
+    return TaskRes(d["t"], d["r"], d["p"], d["id"], d["e"])

@@ -1,0 +1,190 @@
+"""Client-side mods (Flower's built-in DP / SecAgg support, paper §1).
+
+Mods wrap the client's task handling: ``mod(task_ins, call_next) ->
+task_res``.  They compose; ClientApp applies them outermost-first.
+
+- :class:`DPMod` — local DP: clip the client's model *delta* to an L2 bound
+  and add gaussian noise (deterministic per (site, round) so experiments
+  reproduce bitwise).
+- :class:`SecAggMod` + :class:`SecAggFedAvg` — pairwise-mask secure
+  aggregation with exact fixed-point arithmetic: each pair of sites derives
+  a shared seed (from provisioning), masks are ±PRG(seed, round) in uint64
+  mod-2^64 arithmetic, so they cancel exactly in the server's sum and the
+  server never sees an individual update.  The hot quantize+mask loop has a
+  Pallas TPU kernel (``repro.kernels.secagg_mask``); this mod uses the
+  numpy/jnp reference path (CPU container), kernels tests cross-check them.
+- :class:`TopKCompressionMod` — magnitude Top-K delta sparsification.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.fl.messages import (FitRes, TaskIns, TaskRes, decode_fit_ins,
+                               decode_fit_res, encode_fit_ins, encode_fit_res)
+
+NDArrays = List[np.ndarray]
+
+QUANT_BITS = 16                      # fixed-point fractional bits
+QUANT_SCALE = np.uint64(1) << QUANT_BITS
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _l2(arrays: NDArrays) -> float:
+    return float(np.sqrt(sum(float(np.sum(np.square(a.astype(np.float64))))
+                             for a in arrays)))
+
+
+def _prg_mask(seed: int, round_: int, leaf: int, shape, positive: bool
+              ) -> np.ndarray:
+    rng = np.random.default_rng(
+        np.random.SeedSequence(entropy=seed, spawn_key=(round_, leaf)))
+    m = rng.integers(0, np.iinfo(np.uint64).max, size=shape, dtype=np.uint64,
+                     endpoint=True)
+    return m if positive else (np.uint64(0) - m)
+
+
+def quantize(a: np.ndarray) -> np.ndarray:
+    q = np.round(a.astype(np.float64) * float(QUANT_SCALE)).astype(np.int64)
+    return q.view(np.uint64) if q.dtype == np.int64 else q.astype(np.uint64)
+
+
+def dequantize(q: np.ndarray, count: int = 1) -> np.ndarray:
+    signed = q.astype(np.uint64).view(np.int64).astype(np.float64)
+    return (signed / float(QUANT_SCALE)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# DP mod
+# ---------------------------------------------------------------------------
+@dataclass
+class DPMod:
+    clip_norm: float = 1.0
+    noise_multiplier: float = 0.0
+    site_id: int = 0
+    seed: int = 0
+
+    def __call__(self, task: TaskIns, call_next) -> TaskRes:
+        if task.task_type != "fit":
+            return call_next(task)
+        ins = decode_fit_ins(task.payload)
+        res = call_next(task)
+        if res.error:
+            return res
+        fit = decode_fit_res(res.payload)
+        delta = [np.asarray(o, np.float64) - np.asarray(i, np.float64)
+                 for o, i in zip(fit.parameters, ins.parameters)]
+        norm = _l2(delta)
+        scale = min(1.0, self.clip_norm / max(norm, 1e-12))
+        rng = np.random.default_rng(
+            np.random.SeedSequence(entropy=self.seed,
+                                   spawn_key=(self.site_id, task.round)))
+        sigma = self.noise_multiplier * self.clip_norm
+        new_params = []
+        for i, d in enumerate(delta):
+            noised = d * scale
+            if sigma > 0:
+                noised = noised + rng.normal(0.0, sigma, size=d.shape)
+            new_params.append(
+                (np.asarray(ins.parameters[i], np.float64) + noised)
+                .astype(fit.parameters[i].dtype))
+        fit.parameters = new_params
+        fit.metrics = dict(fit.metrics, dp_clip_scale=scale, dp_pre_norm=norm)
+        return TaskRes("fit", task.round, encode_fit_res(fit),
+                       task_id=task.task_id)
+
+
+# ---------------------------------------------------------------------------
+# Secure aggregation
+# ---------------------------------------------------------------------------
+@dataclass
+class SecAggMod:
+    """Masks the (num_examples-weighted) quantized parameters."""
+
+    site: str = ""
+    peers: Sequence[str] = ()
+    pairwise_seed_fn: Callable[[str, str], int] = None  # from provisioning
+
+    def __call__(self, task: TaskIns, call_next) -> TaskRes:
+        if task.task_type != "fit":
+            return call_next(task)
+        res = call_next(task)
+        if res.error:
+            return res
+        fit = decode_fit_res(res.payload)
+        w = float(fit.num_examples)
+        masked = []
+        for leaf, a in enumerate(fit.parameters):
+            q = quantize(np.asarray(a, np.float64) * w)
+            for peer in self.peers:
+                if peer == self.site:
+                    continue
+                seed = self.pairwise_seed_fn(self.site, peer)
+                q = q + _prg_mask(seed, task.round, leaf, q.shape,
+                                  positive=self.site < peer)
+            masked.append(q)
+        fit.parameters = masked
+        fit.metrics = dict(fit.metrics, secagg=1)
+        return TaskRes("fit", task.round, encode_fit_res(fit),
+                       task_id=task.task_id)
+
+
+from repro.fl.strategy import FedAvg  # noqa: E402  (avoid cycle at import top)
+
+
+@dataclass
+class SecAggFedAvg(FedAvg):
+    """Server side of the pairwise-mask protocol: SUM the masked uint64
+    tensors (masks cancel exactly mod 2^64), then dequantize and divide by
+    the total example count."""
+
+    def aggregate_fit(self, rnd, results, failures, current):
+        if failures:
+            raise RuntimeError(
+                f"secure aggregation needs every masked share; missing "
+                f"{[f for f, _ in failures]}")
+        total_w = float(sum(r.num_examples for _, r in results))
+        out = []
+        for leaf in range(len(results[0][1].parameters)):
+            acc = np.zeros_like(results[0][1].parameters[leaf], dtype=np.uint64)
+            for _, r in results:
+                acc = acc + r.parameters[leaf].astype(np.uint64)
+            out.append((dequantize(acc) / total_w).astype(np.float32))
+        return out, {"num_clients": len(results), "secagg": 1}
+
+
+# ---------------------------------------------------------------------------
+# Top-K compression
+# ---------------------------------------------------------------------------
+@dataclass
+class TopKCompressionMod:
+    fraction: float = 0.1
+
+    def __call__(self, task: TaskIns, call_next) -> TaskRes:
+        if task.task_type != "fit":
+            return call_next(task)
+        ins = decode_fit_ins(task.payload)
+        res = call_next(task)
+        if res.error:
+            return res
+        fit = decode_fit_res(res.payload)
+        kept = 0
+        total = 0
+        new_params = []
+        for o, i in zip(fit.parameters, ins.parameters):
+            d = np.asarray(o, np.float64) - np.asarray(i, np.float64)
+            k = max(1, int(np.ceil(self.fraction * d.size)))
+            thresh = np.partition(np.abs(d).ravel(), -k)[-k]
+            mask = np.abs(d) >= thresh
+            kept += int(mask.sum())
+            total += d.size
+            new_params.append((np.asarray(i, np.float64) + d * mask
+                               ).astype(o.dtype))
+        fit.parameters = new_params
+        fit.metrics = dict(fit.metrics, topk_kept_frac=kept / max(total, 1))
+        return TaskRes("fit", task.round, encode_fit_res(fit),
+                       task_id=task.task_id)

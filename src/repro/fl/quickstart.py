@@ -1,0 +1,139 @@
+"""The paper's §5.1 demo workload, in JAX: a small classifier trained
+federatedly (the PyTorch-CIFAR-quickstart analogue).
+
+Used by examples/quickstart.py and benchmarks/repro_curves.py (Fig. 5) —
+deliberately small so the native-vs-in-FLARE comparison runs in seconds.
+Deterministic end to end: given (seed, site), fit() is a pure function of
+the incoming parameters, so histories can be compared bitwise.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import make_classification
+from repro.fl.client import ClientApp, NumPyClient
+from repro.runtime.streaming import SummaryWriter
+
+NDArrays = List[np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# model: 2-hidden-layer MLP classifier (jax, hand-rolled grads via jax.grad)
+# ---------------------------------------------------------------------------
+def init_mlp(key, dim: int, hidden: int, classes: int) -> NDArrays:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1, s2, s3 = dim ** -0.5, hidden ** -0.5, hidden ** -0.5
+    return [
+        np.asarray(jax.random.normal(k1, (dim, hidden)) * s1, np.float32),
+        np.zeros((hidden,), np.float32),
+        np.asarray(jax.random.normal(k2, (hidden, hidden)) * s2, np.float32),
+        np.zeros((hidden,), np.float32),
+        np.asarray(jax.random.normal(k3, (hidden, classes)) * s3, np.float32),
+        np.zeros((classes,), np.float32),
+    ]
+
+
+def _forward(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = jax.nn.relu(x @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    return h @ w3 + b3
+
+
+def _loss(params, x, y, ref_params=None, mu=0.0):
+    logits = _forward(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ce = jnp.mean(logz - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
+    if ref_params is not None:
+        prox = sum(jnp.sum(jnp.square(p - jax.lax.stop_gradient(r)))
+                   for p, r in zip(params, ref_params))
+        ce = ce + 0.5 * mu * prox      # mu == 0 => exact plain FedAvg grads
+    return ce
+
+
+@jax.jit
+def _sgd_epoch(params, x, y, lr, ref_params, mu):
+    def body(p, idx):
+        g = jax.grad(_loss)(p, x[idx], y[idx], ref_params, mu)
+        return [pi - lr * gi for pi, gi in zip(p, g)], ()
+
+    nb = x.shape[0] // 32
+    idxs = jnp.arange(nb * 32).reshape(nb, 32)
+    params, _ = jax.lax.scan(body, params, idxs)
+    return params
+
+
+@jax.jit
+def _evaluate(params, x, y):
+    logits = _forward(params, x)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    loss = jnp.mean(logz - jnp.take_along_axis(logits, y[:, None], 1)[:, 0])
+    acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return loss, acc
+
+
+# ---------------------------------------------------------------------------
+# the Flower-style client (paper Listing 2 shape)
+# ---------------------------------------------------------------------------
+class QuickstartClient(NumPyClient):
+    def __init__(self, site: str, *, dim: int = 32, classes: int = 10,
+                 n_train: int = 512, n_test: int = 256, seed: int = 7,
+                 lr: float = 0.05, epochs: int = 1, skew: float = 0.3,
+                 writer: Optional[SummaryWriter] = None):
+        import re
+        import zlib
+
+        m = re.search(r"(\d+)$", site)
+        site_idx = int(m.group(1)) if m else zlib.crc32(site.encode()) % 1000
+        self.x_train, self.y_train = make_classification(
+            n_train, dim, classes, seed=seed, site=site_idx, skew=skew,
+            split=0)
+        self.x_test, self.y_test = make_classification(
+            n_test, dim, classes, seed=seed, site=site_idx, skew=skew,
+            split=1)
+        self.lr = lr
+        self.epochs = epochs
+        self.writer = writer
+        self._step = 0
+
+    def get_parameters(self, config) -> NDArrays:
+        return init_mlp(jax.random.key(0), self.x_train.shape[1],
+                        64, int(self.y_train.max()) + 1)
+
+    def fit(self, parameters, config):
+        params = [jnp.asarray(p) for p in parameters]
+        ref = params
+        mu = float(config.get("proximal_mu", 0.0))
+        for _ in range(self.epochs):
+            params = _sgd_epoch(params, jnp.asarray(self.x_train),
+                                jnp.asarray(self.y_train),
+                                jnp.asarray(self.lr, jnp.float32), ref,
+                                jnp.asarray(mu, jnp.float32))
+        loss, acc = _evaluate(params, jnp.asarray(self.x_train),
+                              jnp.asarray(self.y_train))
+        if self.writer is not None:    # §5.2 hybrid integration
+            self.writer.add_scalar("train_loss", float(loss), self._step)
+            self.writer.add_scalar("train_accuracy", float(acc), self._step)
+            self._step += 1
+        return ([np.asarray(p) for p in params], len(self.x_train),
+                {"train_loss": float(loss)})
+
+    def evaluate(self, parameters, config):
+        params = [jnp.asarray(p) for p in parameters]
+        loss, acc = _evaluate(params, jnp.asarray(self.x_test),
+                              jnp.asarray(self.y_test))
+        if self.writer is not None:
+            self.writer.add_scalar("test_accuracy", float(acc), self._step)
+        return float(loss), len(self.x_test), {"accuracy": float(acc)}
+
+
+def make_client_app(site: str, mods=None, writer_fn=None, **client_kw) -> ClientApp:
+    def client_fn(cid: str):
+        writer = writer_fn(site) if writer_fn else None
+        return QuickstartClient(site, writer=writer, **client_kw).to_client()
+
+    return ClientApp(client_fn=client_fn, mods=mods)

@@ -1,0 +1,130 @@
+"""Server-side app layer (Flower analogue, paper Listing 1).
+
+    strategy = FedAdam(...)
+    app = ServerApp(config=ServerConfig(num_rounds=3), strategy=strategy)
+
+``ServerApp.run(driver)`` drives FL rounds against an abstract
+:class:`Driver` (Flower Next's Driver API): the native simulation and the
+FLARE-bridged deployment provide different drivers, the app code is
+identical — the "no code changes" property under test in benchmarks.
+"""
+from __future__ import annotations
+
+import threading
+import uuid
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fl.messages import (EvaluateIns, EvaluateRes, FitIns, FitRes,
+                               TaskIns, TaskRes, decode_evaluate_res,
+                               decode_fit_res, decode_task_res,
+                               encode_evaluate_ins, encode_fit_ins,
+                               encode_task_ins, bytes_to_arrays)
+from repro.fl.strategy import Strategy
+
+NDArrays = List[np.ndarray]
+
+
+@dataclass(frozen=True)
+class ServerConfig:
+    num_rounds: int = 3
+    round_timeout: float = 120.0
+
+
+class Driver:
+    """Transport abstraction the ServerApp runs against."""
+
+    def node_ids(self) -> List[str]:
+        raise NotImplementedError
+
+    def send_and_receive(self, tasks: Dict[str, bytes],
+                         timeout: float) -> Dict[str, bytes]:
+        """node_id -> TaskIns bytes; returns node_id -> TaskRes bytes."""
+        raise NotImplementedError
+
+
+@dataclass
+class RoundRecord:
+    round: int
+    loss: Optional[float] = None
+    metrics: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class History:
+    rounds: List[RoundRecord] = field(default_factory=list)
+    final_parameters: Optional[NDArrays] = None
+
+    def losses(self) -> List[Tuple[int, float]]:
+        return [(r.round, r.loss) for r in self.rounds if r.loss is not None]
+
+
+class ServerApp:
+    def __init__(self, config: ServerConfig, strategy: Strategy):
+        self.config = config
+        self.strategy = strategy
+
+    # ------------------------------------------------------------- rounds
+    def run(self, driver: Driver) -> History:
+        history = History()
+        nodes = sorted(driver.node_ids())
+        if not nodes:
+            raise RuntimeError("no connected nodes")
+
+        # round 0: pull initial parameters from the first node if the
+        # strategy does not provide them
+        parameters = self.strategy.initialize_parameters()
+        if parameters is None:
+            t = TaskIns("get_parameters", 0, b"", task_id=uuid.uuid4().hex)
+            res = driver.send_and_receive(
+                {nodes[0]: encode_task_ins(t)}, self.config.round_timeout)
+            task_res = decode_task_res(res[nodes[0]])
+            if task_res.error:
+                raise RuntimeError(task_res.error)
+            parameters = bytes_to_arrays(task_res.payload)
+
+        for rnd in range(1, self.config.num_rounds + 1):
+            # ---- fit phase ----------------------------------------------
+            fit_cfg = self.strategy.configure_fit(rnd, parameters, nodes)
+            tasks = {}
+            for node, ins in fit_cfg.items():
+                t = TaskIns("fit", rnd, encode_fit_ins(ins),
+                            task_id=uuid.uuid4().hex)
+                tasks[node] = encode_task_ins(t)
+            res = driver.send_and_receive(tasks, self.config.round_timeout)
+            fit_results: List[Tuple[str, FitRes]] = []
+            failures: List[Tuple[str, str]] = []
+            for node in sorted(res):                     # deterministic order
+                tr = decode_task_res(res[node])
+                if tr.error:
+                    failures.append((node, tr.error))
+                else:
+                    fit_results.append((node, decode_fit_res(tr.payload)))
+            parameters, agg_metrics = self.strategy.aggregate_fit(
+                rnd, fit_results, failures, parameters)
+
+            # ---- evaluate phase ------------------------------------------
+            ev_cfg = self.strategy.configure_evaluate(rnd, parameters, nodes)
+            record = RoundRecord(rnd, metrics=dict(agg_metrics))
+            if ev_cfg:
+                tasks = {}
+                for node, ins in ev_cfg.items():
+                    t = TaskIns("evaluate", rnd, encode_evaluate_ins(ins),
+                                task_id=uuid.uuid4().hex)
+                    tasks[node] = encode_task_ins(t)
+                res = driver.send_and_receive(tasks, self.config.round_timeout)
+                ev_results: List[Tuple[str, EvaluateRes]] = []
+                for node in sorted(res):
+                    tr = decode_task_res(res[node])
+                    if not tr.error:
+                        ev_results.append((node, decode_evaluate_res(tr.payload)))
+                loss, ev_metrics = self.strategy.aggregate_evaluate(
+                    rnd, ev_results, [])
+                record.loss = loss
+                record.metrics.update(ev_metrics)
+            history.rounds.append(record)
+
+        history.final_parameters = parameters
+        return history

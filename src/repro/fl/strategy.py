@@ -1,0 +1,219 @@
+"""FL strategies (the Flower ecosystem the FLARE side gains access to).
+
+All operate on ``NDArrays`` (list of numpy arrays) with float64 accumulation
+so aggregation is deterministic and ordering-insensitive up to the sorted
+client order the ServerApp enforces.
+
+Implemented: FedAvg, FedAvgM (server momentum), FedAdam / FedYogi
+(adaptive server optimizers, Reddi et al. 2021), FedProx (proximal client
+regularization — the client reads ``config["proximal_mu"]``), robust
+aggregation (coordinate-wise median, trimmed mean, Krum).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fl.messages import EvaluateIns, EvaluateRes, FitIns, FitRes
+
+NDArrays = List[np.ndarray]
+
+
+def weighted_average(results: List[Tuple[NDArrays, float]]) -> NDArrays:
+    total = float(sum(w for _, w in results))
+    out = [np.zeros_like(a, dtype=np.float64) for a in results[0][0]]
+    for arrays, w in results:
+        for i, a in enumerate(arrays):
+            out[i] += (w / total) * a.astype(np.float64)
+    return [o.astype(results[0][0][i].dtype) for i, o in enumerate(out)]
+
+
+class Strategy:
+    def initialize_parameters(self) -> Optional[NDArrays]:
+        return None
+
+    def configure_fit(self, rnd: int, parameters: NDArrays,
+                      nodes: Sequence[str]) -> Dict[str, FitIns]:
+        return {n: FitIns(parameters, {"round": rnd}) for n in nodes}
+
+    def aggregate_fit(self, rnd: int, results: List[Tuple[str, FitRes]],
+                      failures: List[Tuple[str, str]],
+                      current: NDArrays) -> Tuple[NDArrays, Dict[str, Any]]:
+        raise NotImplementedError
+
+    def configure_evaluate(self, rnd: int, parameters: NDArrays,
+                           nodes: Sequence[str]) -> Dict[str, EvaluateIns]:
+        return {n: EvaluateIns(parameters, {"round": rnd}) for n in nodes}
+
+    def aggregate_evaluate(self, rnd: int,
+                           results: List[Tuple[str, EvaluateRes]],
+                           failures: List[Tuple[str, str]]
+                           ) -> Tuple[Optional[float], Dict[str, Any]]:
+        if not results:
+            return None, {}
+        total = sum(r.num_examples for _, r in results)
+        loss = sum(r.loss * r.num_examples for _, r in results) / total
+        metrics: Dict[str, Any] = {}
+        keys = set()
+        for _, r in results:
+            keys |= set(r.metrics)
+        for k in sorted(keys):
+            vals = [(r.metrics[k], r.num_examples) for _, r in results
+                    if k in r.metrics and isinstance(r.metrics[k], (int, float))]
+            if vals:
+                metrics[k] = sum(v * n for v, n in vals) / sum(n for _, n in vals)
+        return float(loss), metrics
+
+
+@dataclass
+class FedAvg(Strategy):
+    initial_parameters: Optional[NDArrays] = None
+    min_fit_clients: int = 1
+
+    def initialize_parameters(self):
+        return self.initial_parameters
+
+    def aggregate_fit(self, rnd, results, failures, current):
+        if len(results) < self.min_fit_clients:
+            raise RuntimeError(
+                f"round {rnd}: {len(results)} results < min {self.min_fit_clients}"
+                f" (failures: {failures})")
+        agg = weighted_average(
+            [(r.parameters, r.num_examples) for _, r in results])
+        return agg, {"num_clients": len(results)}
+
+
+@dataclass
+class FedAvgM(FedAvg):
+    server_lr: float = 1.0
+    momentum: float = 0.9
+    _velocity: Optional[NDArrays] = field(default=None, repr=False)
+
+    def aggregate_fit(self, rnd, results, failures, current):
+        target, m = FedAvg.aggregate_fit(self, rnd, results, failures, current)
+        delta = [t.astype(np.float64) - c.astype(np.float64)
+                 for t, c in zip(target, current)]
+        if self._velocity is None:
+            self._velocity = [np.zeros_like(d) for d in delta]
+        self._velocity = [self.momentum * v + d
+                          for v, d in zip(self._velocity, delta)]
+        new = [c.astype(np.float64) + self.server_lr * v
+               for c, v in zip(current, self._velocity)]
+        return [n.astype(c.dtype) for n, c in zip(new, current)], m
+
+
+@dataclass
+class _AdaptiveBase(FedAvg):
+    """Server-side adaptive optimizers (FedOpt family)."""
+
+    server_lr: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.99
+    tau: float = 1e-3
+    _m: Optional[NDArrays] = field(default=None, repr=False)
+    _v: Optional[NDArrays] = field(default=None, repr=False)
+
+    def _second_moment(self, v, d):
+        raise NotImplementedError
+
+    def aggregate_fit(self, rnd, results, failures, current):
+        target, metrics = FedAvg.aggregate_fit(self, rnd, results, failures,
+                                               current)
+        delta = [t.astype(np.float64) - c.astype(np.float64)
+                 for t, c in zip(target, current)]
+        if self._m is None:
+            self._m = [np.zeros_like(d) for d in delta]
+            self._v = [np.full_like(d, self.tau ** 2) for d in delta]
+        self._m = [self.beta1 * m + (1 - self.beta1) * d
+                   for m, d in zip(self._m, delta)]
+        self._v = [self._second_moment(v, d) for v, d in zip(self._v, delta)]
+        new = [c.astype(np.float64)
+               + self.server_lr * m / (np.sqrt(v) + self.tau)
+               for c, m, v in zip(current, self._m, self._v)]
+        return [n.astype(c.dtype) for n, c in zip(new, current)], metrics
+
+
+@dataclass
+class FedAdam(_AdaptiveBase):
+    def _second_moment(self, v, d):
+        return self.beta2 * v + (1 - self.beta2) * np.square(d)
+
+
+@dataclass
+class FedYogi(_AdaptiveBase):
+    def _second_moment(self, v, d):
+        d2 = np.square(d)
+        return v - (1 - self.beta2) * d2 * np.sign(v - d2)
+
+
+@dataclass
+class FedProx(FedAvg):
+    """FedAvg aggregation; clients get proximal_mu in their fit config."""
+
+    proximal_mu: float = 0.01
+
+    def configure_fit(self, rnd, parameters, nodes):
+        return {n: FitIns(parameters,
+                          {"round": rnd, "proximal_mu": self.proximal_mu})
+                for n in nodes}
+
+
+@dataclass
+class FedMedian(FedAvg):
+    def aggregate_fit(self, rnd, results, failures, current):
+        stacked = [np.median(np.stack([r.parameters[i].astype(np.float64)
+                                       for _, r in results]), axis=0)
+                   for i in range(len(results[0][1].parameters))]
+        return ([s.astype(current[i].dtype) for i, s in enumerate(stacked)],
+                {"num_clients": len(results)})
+
+
+@dataclass
+class FedTrimmedMean(FedAvg):
+    beta: float = 0.2      # fraction trimmed at each end
+
+    def aggregate_fit(self, rnd, results, failures, current):
+        k = int(self.beta * len(results))
+        out = []
+        for i in range(len(results[0][1].parameters)):
+            stack = np.sort(np.stack([r.parameters[i].astype(np.float64)
+                                      for _, r in results]), axis=0)
+            sl = stack[k:len(results) - k] if len(results) > 2 * k else stack
+            out.append(np.mean(sl, axis=0).astype(current[i].dtype))
+        return out, {"num_clients": len(results), "trimmed_each_end": k}
+
+
+@dataclass
+class Krum(FedAvg):
+    """Multi-Krum (Blanchard et al. 2017): pick the update closest to its
+    n-f-2 nearest neighbours; tolerates f byzantine clients."""
+
+    num_byzantine: int = 0
+    num_selected: int = 1
+
+    def aggregate_fit(self, rnd, results, failures, current):
+        vecs = [np.concatenate([a.astype(np.float64).ravel()
+                                for a in r.parameters])
+                for _, r in results]
+        n = len(vecs)
+        f = min(self.num_byzantine, max(0, (n - 3) // 2))
+        scores = []
+        for i in range(n):
+            d = sorted(float(np.sum((vecs[i] - vecs[j]) ** 2))
+                       for j in range(n) if j != i)
+            scores.append(sum(d[: max(n - f - 2, 1)]))
+        chosen = np.argsort(scores)[: max(self.num_selected, 1)]
+        sel = [(results[i][1].parameters, results[i][1].num_examples)
+               for i in chosen]
+        return weighted_average(sel), {"krum_selected": [int(c) for c in chosen]}
+
+
+def make_strategy(name: str, **kw) -> Strategy:
+    table = {"fedavg": FedAvg, "fedavgm": FedAvgM, "fedadam": FedAdam,
+             "fedyogi": FedYogi, "fedprox": FedProx, "fedmedian": FedMedian,
+             "fedtrimmedmean": FedTrimmedMean, "krum": Krum}
+    if name not in table:
+        raise KeyError(f"unknown strategy {name!r}; have {sorted(table)}")
+    return table[name](**kw)

@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the substrate's compute hot spots.
+
+Three kernels (DESIGN.md §6), each with a pure-jnp oracle in ``ref.py`` and
+a jit'd public wrapper in ``ops.py``:
+
+- ``flash_attention``: blockwise causal/GQA/sliding-window attention with
+  online softmax (HBM->VMEM streaming of K/V blocks, MXU-aligned tiles).
+- ``secagg_mask``: fused fixed-point quantize + pairwise-mask reduction for
+  secure aggregation — the elementwise hot path of every FL upload.
+- ``rglru_scan``: chunked RG-LRU linear recurrence h_t = a_t*h_{t-1} + b_t.
+
+This container is CPU-only: kernels are VALIDATED with
+``pl.pallas_call(..., interpret=True)`` which executes the kernel body in
+Python; the BlockSpecs/grids are written for real TPU execution.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every kernel (the ground truth in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,S,H,hd) pre-scaled; k/v: (B,S,KV,hd) -> (B,S,H,hd_v)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qg = q.reshape(B, S, KV, g, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg, k).astype(jnp.float32)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+    return ctx.reshape(B, S, H, v.shape[-1])
+
+
+def secagg_mask_ref(x, masks, weight: float, quant_bits: int = 16):
+    """x: (N,) float; masks: (P, N) int32 (signed per peer already applied).
+
+    out = int32 wraparound( round(x * weight * 2^bits) + sum_p masks[p] )."""
+    q = jnp.round(x.astype(jnp.float32) * weight * (1 << quant_bits))
+    q = jnp.clip(q, -(2.0 ** 31), 2.0 ** 31 - 1).astype(jnp.int32)
+    total = masks.astype(jnp.int32).sum(0, dtype=jnp.int32) if masks.size else 0
+    return q + total                                    # int32 wraps
+
+
+def rglru_scan_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t.  a,b: (B,S,W) fp32; h0: (B,W)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+
+    aT = jnp.swapaxes(a, 0, 1)
+    bT = jnp.swapaxes(b, 0, 1)
+    hT, ys = jax.lax.scan(step, h0, (aT, bT))
+    return jnp.swapaxes(ys, 0, 1), hT

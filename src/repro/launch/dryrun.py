@@ -1,0 +1,405 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input shape) step function against
+the production meshes — 16x16 single pod and 2x16x16 multi-pod — with
+ShapeDtypeStruct inputs only (no allocation: the 236B model never
+materializes a weight).  Prints ``memory_analysis()`` (fits/doesn't fit)
+and ``cost_analysis()`` (FLOPs/bytes for §Roofline), parses the compiled
+HLO for collective bytes, and appends one JSON record per run to --out.
+
+Usage:
+  python -m repro.launch.dryrun --arch h2o-danube-1.8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+  python -m repro.launch.dryrun --arch X --shape train_4k --fl-round  # tight FL
+"""
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import sharding as shlib
+from repro.config import (INPUT_SHAPES, InputShape, TrainConfig,
+                          get_model_config, list_archs, shape_supported)
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.shardings import (batch_shardings, cache_shardings,
+                                    rules_for_shape, state_shardings)
+from repro.models.api import build_model
+from repro.train.steps import (abstract_train_state, make_decode_step,
+                               make_prefill_step, make_train_step)
+
+HBM_PER_CHIP = 16e9   # v5e
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?([a-z0-9]+)\[([0-9,]*)\][^\s]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s64": 8,
+                "u64": 8, "s8": 1, "u8": 1, "pred": 1, "f64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """name -> body text, for every HLO computation block.
+
+    A computation header is a column-0 line ending in "{"; the name is its
+    first %token (headers may contain nested parens in tuple-typed params,
+    so no attempt to parse the signature)."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo_text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            m = re.search(r"%([\w\.\-]+)", line) or \
+                re.search(r"ENTRY\s+([\w\.\-]+)", line)
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name = m.group(1) if m else f"_anon{len(comps)}"
+            cur_lines = [line]
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def _loop_multipliers(hlo_text: str, comps: Dict[str, str]) -> Dict[str, float]:
+    """computation name -> execution count (scan bodies execute trip times).
+
+    HLO cost analysis counts while bodies once; we recover trip counts from
+    each while's condition (compare against a constant) and propagate
+    multiplicatively through nested loops via the call graph.
+    """
+    mult: Dict[str, float] = {}
+    whiles = []   # (enclosing_comp, body_name, cond_name)
+    for cname, body in comps.items():
+        for m in re.finditer(r"while\((?:[^)]*)\).*?condition=%?([\w\.\-_]+).*?"
+                             r"body=%?([\w\.\-_]+)", body):
+            whiles.append((cname, m.group(2), m.group(1)))
+        for m in re.finditer(r"body=%?([\w\.\-_]+).*?condition=%?([\w\.\-_]+)",
+                             body):
+            whiles.append((cname, m.group(1), m.group(2)))
+
+    def trip_of(cond_name: str) -> float:
+        cond = comps.get(cond_name, "")
+        consts = [int(x) for x in re.findall(r"constant\((\d+)\)", cond)]
+        return float(max(consts)) if consts else 1.0
+
+    # iterate to fixpoint over nesting (bounded depth)
+    for _ in range(4):
+        for encl, body_name, cond_name in whiles:
+            base = mult.get(encl, 1.0)
+            mult[body_name] = base * trip_of(cond_name)
+    return mult
+
+
+_CONVERT_RE = re.compile(
+    r"%wrapped_convert[\w\.]*\s*=\s*f32\[([0-9,]+)\]\S*\s+fusion\(")
+
+
+def cpu_convert_artifact_bytes(hlo_text: str) -> float:
+    """bf16->f32 whole-tensor converts inserted by the CPU backend's dot
+    legalization (hoisted out of scans).  TPU MXUs consume bf16 operands
+    directly, so these buffers do not exist on the target hardware — the
+    dry-run subtracts them from the fits-in-HBM estimate (and records them).
+    """
+    total = 0.0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        n = 1
+        for tok in m.group(1).split(","):
+            if tok:
+                n *= int(tok)
+        b = n * 4
+        if b >= 256e6:            # only whole-cache/weight scale converts
+            total += b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes with loop-trip correction.
+
+    Also records "_f32_bytes": the share carried at f32.  The CPU backend
+    legalizes bf16 dots by converting operands to f32 *before* the
+    surrounding collectives, so residual/weight gathers that move bf16 on
+    TPU are measured here at 2x — the roofline uses the bf16-adjusted total
+    (f32 share halved) and keeps the raw numbers in the record."""
+    comps = _split_computations(hlo_text)
+    mults = _loop_multipliers(hlo_text, comps)
+    out: Dict[str, float] = {}
+    f32b = 0.0
+    for cname, body in comps.items():
+        k = mults.get(cname, 1.0)
+        for m in _COLL_RE.finditer(body):
+            dt, shape_s, op = m.groups()
+            n = 1
+            if shape_s:
+                for tok in shape_s.split(","):
+                    if tok:
+                        n *= int(tok)
+            b = k * n * _DTYPE_BYTES.get(dt, 4)
+            out[op] = out.get(op, 0.0) + b
+            if dt == "f32":
+                f32b += b
+    out["_f32_bytes"] = f32b
+    return out
+
+
+def adjusted_collective_total(coll: Dict[str, float]) -> float:
+    raw = sum(v for k, v in coll.items() if not k.startswith("_"))
+    return raw - 0.5 * coll.get("_f32_bytes", 0.0)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll: Dict[str, float],
+                   ici_links: int = 4) -> Dict[str, float]:
+    """Per-device seconds for each roofline term (v5e constants)."""
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = adjusted_collective_total(coll) / (ICI_BW * ici_links)
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dom}
+
+
+def model_flops(cfg, shape: InputShape) -> float:
+    """6*N_active*D for train; 2*N_active*D for inference (per step)."""
+    model = build_model(cfg)
+    n_active = model.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch        # decode: 1 token each
+
+
+def build_step(arch: str, shape: InputShape, mesh, fl_round: bool = False):
+    """Returns (jitted_fn, example_args_abstract) ready to .lower()."""
+    cfg = get_model_config(arch)
+    if shape.kind in ("prefill", "decode"):
+        # serving runs bf16 weights (no fp32 master / optimizer resident)
+        cfg = cfg.replace(param_dtype="bfloat16")
+    model = build_model(cfg)
+    rules = rules_for_shape(shape)
+    # §Perf iteration E: grad-accumulation for the archs whose activations
+    # exceed HBM at global_batch 256 (values from the hillclimb log)
+    micro = {"deepseek-v2-236b": 4, "recurrentgemma-2b": 2}.get(arch, 1)
+    train_cfg = TrainConfig(global_batch=shape.global_batch,
+                            seq_len=shape.seq_len, optimizer="adamw",
+                            microbatches=micro if shape.kind == "train" else 1)
+
+    if fl_round:
+        from repro.core.collective import make_fl_round_step, pod_stacked_state
+
+        # state is pod-stacked (leading num_pods dim = the site axis); the
+        # vmapped local steps see only ("data","model") — no pod constraint
+        shlib.set_activation_mesh(mesh, batch_axes=("data",))
+        n_pods = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pod", 1)
+        k_local = 4
+        step = make_fl_round_step(model, train_cfg, mesh, local_steps=k_local)
+        state = pod_stacked_state(abstract_train_state(model, train_cfg),
+                                  n_pods)
+        batch = model.input_struct(shape)
+        # (pods, K, B/pods, ...) — each pod trains on its own site's stream
+        batches = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (n_pods, k_local, s.shape[0] // n_pods) + s.shape[1:],
+                s.dtype), batch)
+        base_sh = state_shardings(model, train_cfg, mesh, rules=rules)
+        st_sh = jax.tree.map(
+            lambda ns: NamedSharding(mesh, P(
+                "pod" if "pod" in mesh.axis_names else None, *ns.spec)),
+            base_sh)
+        bspec = {k: NamedSharding(mesh, P(
+            "pod" if "pod" in mesh.axis_names else None, None, "data"))
+            for k in batches}
+        fn = jax.jit(step, in_shardings=(st_sh, bspec),
+                     out_shardings=(st_sh, None), donate_argnums=(0,))
+        return fn, (state, batches)
+
+    if shape.kind == "train":
+        step = make_train_step(model, train_cfg)
+        state = abstract_train_state(model, train_cfg)
+        batch = model.input_struct(shape)
+        st_sh = state_shardings(model, train_cfg, mesh, rules=rules)
+        b_sh = batch_shardings(batch, mesh, rules=rules)
+        fn = jax.jit(step, in_shardings=(st_sh, b_sh),
+                     out_shardings=(st_sh, None), donate_argnums=(0,))
+        return fn, (state, batch)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(model, max_len=shape.seq_len)
+        params = model.abstract()
+        batch = model.input_struct(shape)
+        from repro.launch.shardings import params_shardings
+
+        p_sh = params_shardings(model, mesh, rules=rules)
+        b_sh = batch_shardings(batch, mesh, rules=rules)
+        fn = jax.jit(step, in_shardings=(p_sh, b_sh))
+        return fn, (params, batch)
+
+    # decode
+    step = make_decode_step(model)
+    params = model.abstract()
+    from repro.launch.shardings import params_shardings
+
+    p_sh = params_shardings(model, mesh, rules=rules)
+    c_sh, cache = cache_shardings(model, shape.global_batch, shape.seq_len,
+                                  mesh, rules=rules)
+    tokens = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    t_sh = batch_shardings({"tokens": tokens}, mesh, rules=rules)["tokens"]
+    fn = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh),
+                 out_shardings=(None, c_sh), donate_argnums=(1,))
+    return fn, (params, cache, tokens)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool = False,
+            fl_round: bool = False, verbose: bool = True) -> Dict[str, Any]:
+    shape = INPUT_SHAPES[shape_name]
+    cfg = get_model_config(arch)
+    ok, why = shape_supported(cfg, shape)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "fl_round": fl_round,
+    }
+    if not ok:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = why
+        return rec
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    shlib.clear_fallbacks()
+    rules = rules_for_shape(shape)
+    try:
+        shlib.set_activation_mesh(mesh, batch_axes=tuple(
+            a for a in rules["batch"] if a in mesh.axis_names))
+        with mesh:
+            fn, args = build_step(arch, shape, mesh, fl_round=fl_round)
+            lowered = fn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "FAILED"
+        rec["error"] = f"{type(e).__name__}: {e}"[:2000]
+        if verbose:
+            print(json.dumps(rec, indent=1)[:3000], file=sys.stderr)
+        return rec
+    finally:
+        shlib.set_activation_mesh(None)
+
+    n_dev = int(np.prod(mesh.devices.shape))
+    model_axis = mesh.devices.shape[-1]
+    coll = collective_bytes(hlo)
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    arg_b = getattr(mem, "argument_size_in_bytes", 0)
+    tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+    out_b = getattr(mem, "output_size_in_bytes", 0)
+    alias_b = getattr(mem, "alias_size_in_bytes", 0)
+    peak = arg_b + tmp_b + out_b - alias_b
+    cpu_artifact = cpu_convert_artifact_bytes(hlo)
+    peak_tpu = max(peak - cpu_artifact, arg_b)
+    mf = model_flops(cfg, shape)
+
+    from repro.launch.analytic import estimate
+
+    est = estimate(cfg, shape, n_dev, model_axis=model_axis)
+    k_round = 4 if fl_round else 1          # fl-round = K local steps
+    terms = roofline_terms(k_round * est.flops_per_device,
+                           k_round * est.hbm_bytes_per_device, coll)
+
+    rec.update({
+        "status": "ok",
+        "devices": n_dev,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "per_device": {
+            # raw HLO cost analysis (NB: XLA counts scan bodies once —
+            # see launch/analytic.py; analytic numbers drive the roofline)
+            "hlo_flops_raw": hlo_flops,
+            "hlo_bytes_accessed_raw": hlo_bytes,
+            "analytic_flops": est.flops_per_device,
+            "analytic_hbm_bytes": est.hbm_bytes_per_device,
+            "argument_bytes": arg_b,
+            "temp_bytes": tmp_b,
+            "output_bytes": out_b,
+            "alias_bytes": alias_b,
+            "peak_bytes_est": peak,
+            "cpu_convert_artifact_bytes": cpu_artifact,
+            "peak_bytes_tpu_est": peak_tpu,
+            "fits_16GB": bool(peak_tpu <= HBM_PER_CHIP),
+            "collective_bytes": coll,
+        },
+        "roofline": terms,
+        "model_flops_total": mf,
+        "model_flops_per_device": mf / n_dev,
+        "useful_flops_frac": ((mf / n_dev) / est.flops_per_device
+                              if est.flops_per_device else None),
+        "sharding_fallbacks": dict(shlib.FALLBACKS),
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {rec['mesh']}"
+              f"{' fl-round' if fl_round else ''}] "
+              f"compile={t_compile:.0f}s aflops/dev={est.flops_per_device:.3g} "
+              f"abytes/dev={est.hbm_bytes_per_device:.3g} "
+              f"peak={peak/1e9:.2f}GB tpu~{peak_tpu/1e9:.2f}GB "
+              f"fits={rec['per_device']['fits_16GB']} "
+              f"coll={ {k: f'{v:.3g}' for k, v in coll.items()} } "
+              f"dom={terms['dominant']} "
+              f"useful={rec['useful_flops_frac'] and round(rec['useful_flops_frac'],2)}",
+              flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fl-round", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    runs = []
+    if args.all:
+        pairs = [(a, s) for a in list_archs() if a != "flower-quickstart"
+                 for s in INPUT_SHAPES]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch, shape in pairs:
+        for mp in meshes:
+            rec = run_one(arch, shape, multi_pod=mp, fl_round=args.fl_round)
+            runs.append(rec)
+            if args.out:
+                with open(args.out, "a") as f:
+                    f.write(json.dumps(rec) + "\n")
+    n_fail = sum(r["status"] == "FAILED" for r in runs)
+    n_ok = sum(r["status"] == "ok" for r in runs)
+    n_skip = sum(r["status"] == "skipped" for r in runs)
+    print(f"dry-run summary: {n_ok} ok, {n_skip} skipped, {n_fail} FAILED")
+    if n_fail:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Unified model facade.
+
+``build_model(cfg)`` returns a :class:`Model` whose methods cover every
+architecture family (decoder-only, enc-dec, VLM/audio-frontend variants)
+behind one contract:
+
+    params = model.init(key)            # or model.abstract() for dry-runs
+    logits, _, metrics = model.apply(params, batch, mode="train")
+    cache = model.init_cache(batch_size, max_len)
+    logits, cache, _ = model.apply(params, batch, mode="decode", cache=cache)
+
+``batch`` is a dict: tokens, labels, and (per family) extra_embeds /
+audio_embeds.  `model.input_struct(shape)` produces the ShapeDtypeStruct
+stand-ins the multi-pod dry-run lowers against.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import InputShape, ModelConfig
+from repro.models import encdec, transformer
+from repro.models.base import abstract_params, axes_tree, init_params
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- params
+    def param_specs(self):
+        if self.cfg.is_encoder_decoder:
+            return encdec.param_specs(self.cfg)
+        return transformer.param_specs(self.cfg)
+
+    def init(self, key):
+        return init_params(self.param_specs(), key, self.cfg.param_dtype)
+
+    def abstract(self):
+        return abstract_params(self.param_specs(), self.cfg.param_dtype)
+
+    def axes(self):
+        return axes_tree(self.param_specs())
+
+    # ------------------------------------------------------------- forward
+    def apply(self, params, batch: Dict[str, Any], *, mode: str,
+              cache: Optional[Dict] = None, impl: str = "xla",
+              prefill_max_len: Optional[int] = None,
+              last_logit_only: bool = False):
+        cfg = self.cfg
+        if cfg.is_encoder_decoder:
+            return encdec.forward(params, cfg, batch["tokens"], mode=mode,
+                                  audio_embeds=batch.get("audio_embeds"),
+                                  cache=cache, impl=impl,
+                                  last_logit_only=last_logit_only)
+        return transformer.forward(params, cfg, batch["tokens"], mode=mode,
+                                   cache=cache,
+                                   extra_embeds=batch.get("extra_embeds"),
+                                   impl=impl, prefill_max_len=prefill_max_len,
+                                   last_logit_only=last_logit_only)
+
+    def init_cache(self, batch: int, max_len: int):
+        if self.cfg.is_encoder_decoder:
+            return encdec.init_cache(self.cfg, batch, max_len)
+        return transformer.init_cache(self.cfg, batch, max_len)
+
+    # ------------------------------------------------------------- inputs
+    def batch_keys(self, kind: str) -> Tuple[str, ...]:
+        keys = ["tokens"]
+        if kind == "train":
+            keys.append("labels")
+        if self.cfg.frontend == "vision" and kind != "decode":
+            keys.append("extra_embeds")
+        if self.cfg.is_encoder_decoder and kind != "decode":
+            keys.append("audio_embeds")
+        return tuple(keys)
+
+    def input_struct(self, shape: InputShape) -> Dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for the dry-run (no allocation)."""
+        cfg = self.cfg
+        B = shape.global_batch
+        S = 1 if shape.kind == "decode" else shape.seq_len
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.frontend == "vision" and shape.kind != "decode":
+            out["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_tokens, cfg.d_model), cfg.compute_dtype)
+        if cfg.is_encoder_decoder and shape.kind != "decode":
+            out["audio_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq or 1500, cfg.d_model), cfg.compute_dtype)
+        return out
+
+    def make_batch(self, shape_or_batch, seq_len: Optional[int] = None,
+                   seed: int = 0) -> Dict[str, np.ndarray]:
+        """Concrete random batch (smoke tests / examples)."""
+        if isinstance(shape_or_batch, InputShape):
+            B, S, kind = (shape_or_batch.global_batch, shape_or_batch.seq_len,
+                          shape_or_batch.kind)
+            S = 1 if kind == "decode" else S
+        else:
+            B, S, kind = shape_or_batch, seq_len, "train"
+        rng = np.random.default_rng(seed)
+        cfg = self.cfg
+        out: Dict[str, np.ndarray] = {
+            "tokens": rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)}
+        if kind == "train":
+            out["labels"] = rng.integers(0, cfg.vocab_size, (B, S), dtype=np.int32)
+        if cfg.frontend == "vision" and kind != "decode":
+            out["extra_embeds"] = rng.normal(
+                size=(B, cfg.num_prefix_tokens, cfg.d_model)).astype(np.float32)
+        if cfg.is_encoder_decoder and kind != "decode":
+            out["audio_embeds"] = rng.normal(
+                size=(B, cfg.encoder_seq or 1500, cfg.d_model)).astype(np.float32)
+        return out
+
+    def param_count(self) -> int:
+        specs = self.param_specs()
+        from repro.models.base import ParamSpec
+
+        return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec)))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE discounts unused experts)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.moe.enabled:
+            return total
+        m = cfg.moe
+        n_moe_layers = cfg.num_layers - m.first_dense_layers
+        per_expert = 3 * cfg.d_model * m.d_ff
+        inactive = n_moe_layers * (m.num_experts - m.experts_per_token) * per_expert
+        return total - inactive
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

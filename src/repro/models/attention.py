@@ -1,0 +1,264 @@
+"""Attention blocks: full / GQA / MQA / sliding-window / local, and
+DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Each block exposes
+  specs(cfg)                         -> ParamSpec tree (one layer)
+  init_cache(cfg, batch, max_len)    -> decode cache (one layer)
+  apply(params, x, cfg, *, mode, positions, cache, layer_kind)
+        -> (y, new_cache)
+
+``mode`` is "train" | "prefill" | "decode".  In decode mode x is (B, 1, d)
+and the cache advances by one position.  Sliding-window kinds keep a
+rotating cache of ``window`` slots.
+
+The score/softmax/value contraction is routed through
+``repro.models.attention_impl`` so the XLA path (used by the 512-device
+dry-run; CPU-lowerable) and the Pallas flash kernel path (TPU target,
+validated in interpret mode) are interchangeable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ATTN, LOCAL_ATTN, MLA, SWA, ModelConfig
+from repro.models import attention_impl
+from repro.models.base import ParamSpec, apply_rope, norm_spec, apply_norm
+from repro.sharding import cast_weight, constrain_heads
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention
+# ---------------------------------------------------------------------------
+def specs(cfg: ModelConfig) -> Dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    out = {
+        "wq": ParamSpec((d, H, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, KV, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), ("heads", "head_dim", "embed")),
+    }
+    if cfg.qk_norm:
+        out["q_norm"] = {"scale": ParamSpec((hd,), ("head_dim",), "zeros")}
+        out["k_norm"] = {"scale": ParamSpec((hd,), ("head_dim",), "zeros")}
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str) -> Dict:
+    if kind == MLA:
+        return mla_init_cache(cfg, batch, max_len)
+    if kind in (SWA, LOCAL_ATTN) and cfg.window:
+        max_len = min(max_len, cfg.window)
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = cfg.compute_dtype
+    return {
+        "k": jnp.zeros((batch, max_len, KV, hd), dt),
+        "v": jnp.zeros((batch, max_len, KV, hd), dt),
+        # absolute position stored per slot (rotating caches need it for
+        # masking + rope); -1 marks an empty slot.
+        "slot_pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def _qk_normalize(params, q, k, cfg):
+    if not cfg.qk_norm:
+        return q, k
+
+    def _rms(x, scale):
+        x32 = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        return (x32 * jax.lax.rsqrt(var + 1e-6)
+                * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+    return _rms(q, params["q_norm"]["scale"]), _rms(k, params["k_norm"]["scale"])
+
+
+def apply(params, x, cfg: ModelConfig, *, mode: str, positions,
+          cache: Optional[Dict] = None, kind: str = ATTN,
+          impl: str = "xla", max_len: Optional[int] = None,
+          ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    if kind == MLA:
+        return mla_apply(params, x, cfg, mode=mode, positions=positions,
+                         cache=cache, max_len=max_len)
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    window = cfg.window if kind in (SWA, LOCAL_ATTN) else 0
+
+    q = jnp.einsum("bsd,dnh->bsnh", x,
+                   cast_weight(params["wq"], x.dtype,
+                               ("embed", "heads", "head_dim")))
+    k = jnp.einsum("bsd,dnh->bsnh", x,
+                   cast_weight(params["wk"], x.dtype,
+                               ("embed", "kv_heads", "head_dim")))
+    v = jnp.einsum("bsd,dnh->bsnh", x,
+                   cast_weight(params["wv"], x.dtype,
+                               ("embed", "kv_heads", "head_dim")))
+    q, k = _qk_normalize(params, q, k, cfg)
+    if cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = q / jnp.sqrt(jnp.asarray(hd, jnp.float32)).astype(q.dtype)
+
+    if mode in ("train", "prefill"):
+        ctx = attention_impl.causal_attention(q, k, v, window=window, impl=impl)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = _fill_cache_from_prefill(cfg, k, v, positions, kind,
+                                                 max_len=max_len)
+    else:  # decode: S == 1
+        assert cache is not None
+        cache_len = cache["k"].shape[1]
+        pos = positions[:, 0] if positions.ndim == 2 else positions  # (B,)
+        slot = jnp.mod(pos, cache_len) if window else jnp.minimum(pos, cache_len - 1)
+        bidx = jnp.arange(B)
+        new_k = cache["k"].at[bidx, slot].set(k[:, 0])
+        new_v = cache["v"].at[bidx, slot].set(v[:, 0])
+        new_sp = cache["slot_pos"].at[bidx, slot].set(pos)
+        ctx = attention_impl.decode_attention(
+            q, new_k, new_v, slot_pos=new_sp, query_pos=pos, window=window)
+        new_cache = {"k": new_k, "v": new_v, "slot_pos": new_sp}
+
+    y = jnp.einsum("bsnh,nhd->bsd", ctx,
+                   cast_weight(params["wo"], x.dtype,
+                               ("heads", "head_dim", "embed")))
+    return y, new_cache
+
+
+def _fill_cache_from_prefill(cfg, k, v, positions, kind,
+                             max_len: Optional[int] = None) -> Dict:
+    """Build a decode-ready cache from prefill K/V (last `window` if SWA).
+
+    If ``max_len`` exceeds the prefill length the cache is padded with empty
+    (slot_pos = -1) slots so decode can append new tokens."""
+    B, S = k.shape[0], k.shape[1]
+    window = cfg.window if kind in (SWA, LOCAL_ATTN) and cfg.window else 0
+    pos = jnp.broadcast_to(positions, (B, S)) if positions.ndim == 1 else positions
+    if window and S > window:
+        # rotating cache: position p lives in slot p % window; the last
+        # `window` tokens occupy exactly the full cache.
+        k, v, pos = k[:, -window:], v[:, -window:], pos[:, -window:]
+        S = window
+        slots = jnp.mod(pos[0], window)
+        order = jnp.argsort(slots)
+        k, v, pos = k[:, order], v[:, order], pos[:, order]
+    pos = pos.astype(jnp.int32)
+    target = min(max_len, cfg.window) if (max_len and window) else max_len
+    if target and target > S:
+        pad = target - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+    return {"k": k, "v": v, "slot_pos": pos}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+# Projections:
+#   c_q   = W_DQ x                (q_lora_rank)
+#   q     = W_UQ c_q              -> per head [q_nope (nope_dim), q_pe (rope_dim)]
+#   c_kv  = W_DKV x               (kv_lora_rank)      <- THE cached latent
+#   k_pe  = W_KR x                (rope_dim, shared across heads, rope'd)
+#   k     = [W_UK c_kv, k_pe] ; v = W_UV c_kv
+# Decode uses the absorbed form: score_h = q_nope_h^T W_UK_h c + q_pe_h^T k_pe
+# so only (c_kv, k_pe) is cached — the paper's 93%-smaller KV cache.
+def mla_specs(cfg: ModelConfig) -> Dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    nope, rope_d, vdim = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    return {
+        "wdq": ParamSpec((d, m.q_lora_rank), ("embed", "lora")),
+        "q_norm": norm_spec(cfg, m.q_lora_rank),
+        "wuq": ParamSpec((m.q_lora_rank, H, nope + rope_d),
+                         ("lora", "heads", "head_dim")),
+        "wdkv": ParamSpec((d, m.kv_lora_rank), ("embed", "lora")),
+        "kv_norm": norm_spec(cfg, m.kv_lora_rank),
+        "wuk": ParamSpec((m.kv_lora_rank, H, nope), ("lora", "heads", "head_dim")),
+        "wuv": ParamSpec((m.kv_lora_rank, H, vdim), ("lora", "heads", "head_dim")),
+        "wkr": ParamSpec((d, rope_d), ("embed", "head_dim")),
+        "wo": ParamSpec((H, vdim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    m, dt = cfg.mla, cfg.compute_dtype
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+        "kpe": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dt),
+        "slot_pos": jnp.full((batch, max_len), -1, jnp.int32),
+    }
+
+
+def mla_apply(params, x, cfg: ModelConfig, *, mode: str, positions,
+              cache: Optional[Dict] = None, max_len: Optional[int] = None):
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nope, rope_d = m.qk_nope_head_dim, m.qk_rope_head_dim
+    scale = 1.0 / jnp.sqrt(jnp.asarray(nope + rope_d, jnp.float32)).astype(x.dtype)
+
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wdq"].astype(x.dtype))
+    cq = apply_norm(params["q_norm"], cq, cfg)
+    q = jnp.einsum("bsr,rnh->bsnh", cq, params["wuq"].astype(x.dtype))
+    q_nope, q_pe = q[..., :nope], q[..., nope:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wdkv"].astype(x.dtype))
+    ckv = apply_norm(params["kv_norm"], ckv, cfg)
+    kpe = jnp.einsum("bsd,dr->bsr", x, params["wkr"].astype(x.dtype))
+    kpe = apply_rope(kpe[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if mode in ("train", "prefill"):
+        # naive (non-absorbed) form: expand k, v per head — best for FLOPs
+        # utilization during training where S is large.
+        k_nope = jnp.einsum("bsr,rnh->bsnh", ckv, params["wuk"].astype(x.dtype))
+        v = jnp.einsum("bsr,rnh->bsnh", ckv, params["wuv"].astype(x.dtype))
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kpe[:, :, None, :], (B, S, H, rope_d))],
+            axis=-1)
+        qq = jnp.concatenate([q_nope, q_pe], axis=-1) * scale
+        # re-pin head sharding: the k_pe broadcast + concat otherwise lets
+        # GSPMD replicate heads (observed 8.6GB f32 score buffers x many)
+        qq = constrain_heads(qq)
+        k = constrain_heads(k)
+        v = constrain_heads(v)
+        ctx = attention_impl.causal_attention(qq, k, v, window=0, impl="xla")
+        new_cache = None
+        if mode == "prefill":
+            pos = jnp.broadcast_to(positions, (B, S)) if positions.ndim == 1 else positions
+            pos = pos.astype(jnp.int32)
+            ckv_c, kpe_c = ckv, kpe
+            if max_len and max_len > S:
+                pad = max_len - S
+                ckv_c = jnp.pad(ckv_c, ((0, 0), (0, pad), (0, 0)))
+                kpe_c = jnp.pad(kpe_c, ((0, 0), (0, pad), (0, 0)))
+                pos = jnp.pad(pos, ((0, 0), (0, pad)), constant_values=-1)
+            new_cache = {"ckv": ckv_c, "kpe": kpe_c, "slot_pos": pos}
+    else:
+        assert cache is not None
+        pos = positions[:, 0] if positions.ndim == 2 else positions
+        cache_len = cache["ckv"].shape[1]
+        slot = jnp.minimum(pos, cache_len - 1)
+        bidx = jnp.arange(B)
+        ckv_c = cache["ckv"].at[bidx, slot].set(ckv[:, 0])
+        kpe_c = cache["kpe"].at[bidx, slot].set(kpe[:, 0])
+        sp = cache["slot_pos"].at[bidx, slot].set(pos)
+        # absorbed decode: q'_h = W_UK_h^T q_nope_h  (B,H,rank)
+        q_abs = jnp.einsum("bnh,rnh->bnr", q_nope[:, 0], params["wuk"].astype(x.dtype))
+        scores = (jnp.einsum("bnr,bsr->bns", q_abs, ckv_c,
+                             preferred_element_type=jnp.float32)
+                  + jnp.einsum("bnh,bsh->bns", q_pe[:, 0], kpe_c,
+                               preferred_element_type=jnp.float32)) \
+            * jnp.float32(scale)
+        mask = (sp >= 0) & (sp <= pos[:, None])          # (B, S)
+        scores = jnp.where(mask[:, None, :], scores, -jnp.inf)
+        w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+        ctx_lat = jnp.einsum("bns,bsr->bnr", w, ckv_c)   # attend in latent space
+        ctx = jnp.einsum("bnr,rnh->bnh", ctx_lat, params["wuv"].astype(x.dtype))
+        ctx = ctx[:, None]                                # (B,1,H,vdim)
+        new_cache = {"ckv": ckv_c, "kpe": kpe_c, "slot_pos": sp}
+
+    y = jnp.einsum("bsnh,nhd->bsd", ctx, params["wo"].astype(x.dtype))
+    return y, new_cache

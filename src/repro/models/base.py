@@ -1,0 +1,164 @@
+"""Spec-first parameter system + shared layer primitives.
+
+Single source of truth per module: a nested dict of :class:`ParamSpec`
+(shape, logical axes, initializer).  From the same spec tree we derive
+  * random initial params            (:func:`init_params`)
+  * allocation-free abstract params  (:func:`abstract_params`) — this is how
+    the 236B dry-run never materializes a weight
+  * the logical-axes tree            (:func:`axes_tree`) consumed by
+    ``repro.sharding.spec_for``
+
+Apply functions consume plain pytrees of arrays.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Axes
+    init: str = "fan_in"      # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+    dtype: Optional[str] = None   # override param_dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _leaf_key(root_key, path: str):
+    # deterministic per-leaf key: fold a *stable* path hash into the root key
+    # (zlib.crc32, not hash() — PYTHONHASHSEED must not affect init, or the
+    # paper's Fig.5 bitwise-reproducibility experiment breaks across runs)
+    import zlib
+
+    h = np.uint32(zlib.crc32(path.encode()) & 0x7FFFFFFF)
+    return jax.random.fold_in(root_key, h)
+
+
+def _materialize(spec: ParamSpec, key, param_dtype) -> jnp.ndarray:
+    dtype = jnp.dtype(spec.dtype or param_dtype)
+    shape = spec.shape
+    if spec.init == "zeros":
+        return jnp.zeros(shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(shape, dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    if spec.init == "embed":
+        return (spec.scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    if spec.init == "fan_in":
+        # truncated-normal fan-in init over the second-to-last... we use the
+        # convention: contraction dim(s) are all dims except the last.
+        fan_in = int(np.prod(shape[:-1])) if len(shape) > 1 else shape[0]
+        std = spec.scale / math.sqrt(max(fan_in, 1))
+        return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                  jnp.float32)).astype(dtype)
+    raise ValueError(f"unknown init {spec.init!r}")
+
+
+def init_params(specs, key, param_dtype="float32"):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(specs, is_leaf=_is_spec)
+    leaves = [
+        _materialize(spec, _leaf_key(key, jax.tree_util.keystr(path)), param_dtype)
+        for path, spec in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def abstract_params(specs, param_dtype="float32"):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or param_dtype)),
+        specs, is_leaf=_is_spec)
+
+
+def axes_tree(specs):
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=_is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Primitives (pure functions over plain arrays)
+# ---------------------------------------------------------------------------
+def rmsnorm(x, scale, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_spec(cfg, dim: int) -> Dict[str, ParamSpec]:
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((dim,), ("embed_nofsdp",), "ones"),
+                "bias": ParamSpec((dim,), ("embed_nofsdp",), "zeros")}
+    return {"scale": ParamSpec((dim,), ("embed_nofsdp",), "zeros")}
+
+
+def apply_norm(params, x, cfg):
+    if cfg.norm == "layernorm":
+        return layernorm(x, params["scale"], params["bias"])
+    return rmsnorm(x, params["scale"])
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(name)
+
+
+# --------------------------- rotary embeddings ------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, d/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, d/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32) / dim * math.log(10000.0))
+    ang = pos * inv[None, :]
+    emb = jnp.zeros((seq, dim), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(ang))
+    emb = emb.at[:, 1::2].set(jnp.cos(ang))
+    return emb
+
+
+def softcap(logits, cap: float):
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits

@@ -1,0 +1,373 @@
+"""Recurrent blocks: Griffin/RecurrentGemma RG-LRU, xLSTM mLSTM + sLSTM.
+
+All three expose the same contract as the attention blocks:
+  *_specs(cfg)                       -> ParamSpec tree (one layer)
+  *_init_cache(cfg, batch)           -> decode state (one layer)
+  *_apply(params, x, cfg, mode, cache) -> (y, new_cache)
+
+Training/prefill use parallel forms (associative scan for RG-LRU, the
+stabilized quadratic parallel form for mLSTM, a `lax.scan` for the
+inherently-sequential sLSTM); decode advances the recurrent state by one
+token — O(1) per token, which is why these archs run the `long_500k` shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.base import ParamSpec, activation
+
+RGLRU_C = 8.0
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _block_diag_spec(heads: int, width: int) -> ParamSpec:
+    per = width // heads
+    return ParamSpec((heads, per, per), ("heads", "state", "state"))
+
+
+def _block_diag_apply(w, x, heads: int):
+    """x: (..., width) -> block-diagonal linear per head."""
+    per = w.shape[-1]
+    xh = x.reshape(x.shape[:-1] + (heads, per))
+    y = jnp.einsum("...hi,hij->...hj", xh, w.astype(x.dtype))
+    return y.reshape(x.shape)
+
+
+def _causal_conv(x, w, b, conv_state=None):
+    """Depthwise temporal conv. x: (B,S,W); w: (K,W); returns y, new_state.
+
+    conv_state: (B,K-1,W) previous inputs (decode/prefill-carry)."""
+    B, S, width = x.shape
+    K = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((B, K - 1, width), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)              # (B, S+K-1, W)
+    y = sum(xp[:, i:i + S] * w[i].astype(x.dtype) for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):] if K > 1 else jnp.zeros((B, 0, width), x.dtype)
+    return y, new_state
+
+
+# ===========================================================================
+# RG-LRU (RecurrentGemma, arXiv:2402.19427)
+# ===========================================================================
+def rglru_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    H = cfg.num_heads
+    return {
+        "wx": ParamSpec((d, w), ("embed", "mlp")),
+        "wy": ParamSpec((d, w), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_width, w), ("conv", "mlp"), "normal",
+                            scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": ParamSpec((w,), ("mlp",), "zeros"),
+        "gate_a": _block_diag_spec(H, w),
+        "gate_a_b": ParamSpec((w,), ("mlp",), "zeros"),
+        "gate_i": _block_diag_spec(H, w),
+        "gate_i_b": ParamSpec((w,), ("mlp",), "zeros"),
+        # Λ parametrized so that a = exp(-c*softplus(Λ)) starts in [0.9, 0.999]
+        "lam": ParamSpec((w,), ("mlp",), "normal", scale=0.5),
+        "wo": ParamSpec((w, d), ("mlp", "embed")),
+    }
+
+
+def rglru_init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    w = cfg.lru_width or cfg.d_model
+    dt = cfg.compute_dtype
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dt),
+    }
+
+
+def _rglru_gates(params, xb, cfg):
+    H = cfg.num_heads
+    r = jax.nn.sigmoid(_block_diag_apply(params["gate_a"], xb, H)
+                       + params["gate_a_b"].astype(xb.dtype))
+    i = jax.nn.sigmoid(_block_diag_apply(params["gate_i"], xb, H)
+                       + params["gate_i_b"].astype(xb.dtype))
+    log_a = (-RGLRU_C * jax.nn.softplus(params["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))                    # (B,S,W) or (B,W)
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.clip(1.0 - jnp.square(a), 1e-12)) \
+        * (i.astype(jnp.float32) * xb.astype(jnp.float32))
+    return a, gated_x
+
+
+def rglru_apply(params, x, cfg: ModelConfig, *, mode: str,
+                cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    xb = jnp.einsum("bsd,dw->bsw", x, params["wx"].astype(x.dtype))
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, params["wy"].astype(x.dtype)))
+    conv_state = cache["conv"] if cache is not None else None
+    xb, new_conv = _causal_conv(xb, params["conv_w"], params["conv_b"], conv_state)
+
+    a, gx = _rglru_gates(params, xb, cfg)               # fp32 (B,S,W)
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, xb.shape[-1]), jnp.float32)
+
+    if mode == "decode":                                 # S == 1
+        h = a[:, 0] * h0 + gx[:, 0]
+        y_rec = h[:, None]
+        new_cache = {"h": h, "conv": new_conv}
+    else:
+        # h_t = a_t h_{t-1} + gx_t  via associative scan on (a, b) pairs
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        gx0 = gx.at[:, 0].add(a[:, 0] * h0)              # fold initial state in
+        a_s, h_all = jax.lax.associative_scan(combine, (a, gx0), axis=1)
+        y_rec = h_all
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"h": h_all[:, -1], "conv": new_conv}
+
+    y = (y_rec.astype(x.dtype) * gate)
+    return jnp.einsum("bsw,wd->bsd", y, params["wo"].astype(x.dtype)), new_cache
+
+
+# ===========================================================================
+# mLSTM (xLSTM, arXiv:2405.04517) — matrix memory, parallelizable
+# ===========================================================================
+def mlstm_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    dk = di // H
+    return {
+        "w_up": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamSpec((cfg.conv_width, di), ("conv", "mlp"), "normal",
+                            scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": ParamSpec((di,), ("mlp",), "zeros"),
+        "wq": ParamSpec((di, H, dk), ("mlp", "heads", "head_dim")),
+        "wk": ParamSpec((di, H, dk), ("mlp", "heads", "head_dim")),
+        "wv": ParamSpec((di, H, dk), ("mlp", "heads", "head_dim")),
+        "w_if": ParamSpec((di, 2 * H), ("mlp", "heads"), "normal", scale=0.02),
+        "b_if": ParamSpec((2 * H,), ("heads",), "zeros"),
+        "gn_scale": ParamSpec((H, dk), ("heads", "head_dim"), "zeros"),
+        "skip_scale": ParamSpec((di,), ("mlp",), "ones"),
+        "w_down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def mlstm_init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dk = di // H
+    return {
+        "C": jnp.zeros((batch, H, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, H, dk), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), cfg.compute_dtype),
+    }
+
+
+def _groupnorm_heads(h, scale):
+    """h: (B,S,H,dk) per-head normalization."""
+    h32 = h.astype(jnp.float32)
+    mu = jnp.mean(h32, axis=-1, keepdims=True)
+    var = jnp.var(h32, axis=-1, keepdims=True)
+    y = (h32 - mu) * jax.lax.rsqrt(var + 1e-6)
+    return y * (1.0 + scale.astype(jnp.float32))
+
+
+def mlstm_apply(params, x, cfg: ModelConfig, *, mode: str,
+                cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    H = cfg.num_heads
+    up = jnp.einsum("bsd,de->bse", x, params["w_up"].astype(x.dtype))
+    xm, z = jnp.split(up, 2, axis=-1)                    # (B,S,di) each
+    di = xm.shape[-1]
+    dk = di // H
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xm, params["conv_w"], params["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    q = jnp.einsum("bse,enh->bsnh", xc, params["wq"].astype(x.dtype)) / math.sqrt(dk)
+    k = jnp.einsum("bse,enh->bsnh", xc, params["wk"].astype(x.dtype)) / math.sqrt(dk)
+    v = jnp.einsum("bse,enh->bsnh", xm, params["wv"].astype(x.dtype))
+    if_gates = (jnp.einsum("bse,eg->bsg", xc, params["w_if"].astype(x.dtype))
+                + params["b_if"].astype(x.dtype)).astype(jnp.float32)
+    i_raw, f_raw = jnp.split(if_gates, 2, axis=-1)       # (B,S,H)
+    logf = -jax.nn.softplus(-f_raw)                      # log sigmoid(f)
+
+    if mode == "decode":
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+        i1, f1 = i_raw[:, 0], logf[:, 0]                 # (B,H)
+        m1 = jnp.maximum(f1 + m0, i1)
+        fs = jnp.exp(f1 + m0 - m1)[..., None]
+        isc = jnp.exp(i1 - m1)[..., None]
+        k1, v1, q1 = k[:, 0].astype(jnp.float32), v[:, 0].astype(jnp.float32), \
+            q[:, 0].astype(jnp.float32)
+        C1 = fs[..., None] * C0 + isc[..., None] * k1[..., :, None] * v1[..., None, :]
+        n1 = fs * n0 + isc * k1
+        num = jnp.einsum("bhk,bhkv->bhv", q1, C1)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q1, n1)),
+                          jnp.exp(-m1))[..., None]
+        h = (num / den)[:, None]                         # (B,1,H,dk)
+        new_cache = {"C": C1, "n": n1, "m": m1, "conv": new_conv}
+    else:
+        # stabilized parallel (quadratic) form, CHUNKED over queries:
+        # the naive (B,Sq,Sk,H) fp32 logd/D/scores tensors cost
+        # B_loc*S^2*H*4B each (observed 25GB/device at train_4k — §Perf
+        # iteration A); chunking bounds them to (B,Cq,Sk,H) and
+        # jax.checkpoint recomputes them in the backward pass.
+        F = jnp.cumsum(logf, axis=1)                     # (B,S,H)
+        q32 = q.astype(jnp.float32)
+        k32 = k.astype(jnp.float32)
+        v32 = v.astype(jnp.float32)
+
+        def chunk_fn(start, Fq, qc):
+            # Fq: (B,Cq,H); qc: (B,Cq,H,dk)
+            logd = (Fq[:, :, None, :] - F[:, None, :, :]
+                    + i_raw[:, None, :, :])              # (B,Cq,Sk,H)
+            qpos = start + jnp.arange(Fq.shape[1])[:, None]
+            kpos = jnp.arange(S)[None, :]
+            mask = kpos <= qpos
+            logd = jnp.where(mask[None, :, :, None], logd, -jnp.inf)
+            mrow = jnp.max(logd, axis=2)                 # (B,Cq,H)
+            D = jnp.exp(logd - mrow[:, :, None, :])
+            sc = jnp.einsum("bqnh,bknh->bqkn", qc, k32) * D
+            norm = jnp.maximum(jnp.abs(sc.sum(2)), jnp.exp(-mrow))
+            return jnp.einsum("bqkn,bknh->bqnh", sc, v32) / norm[..., None]
+
+        Cq = S
+        for c in range(min(1024, S), 0, -1):
+            if S % c == 0:
+                Cq = c
+                break
+        if Cq == S:
+            h = chunk_fn(0, F, q32)
+        else:
+            n = S // Cq
+            Fqs = jnp.moveaxis(F.reshape(B, n, Cq, H), 1, 0)
+            qcs = jnp.moveaxis(q32.reshape(B, n, Cq, H, -1), 1, 0)
+            body = jax.checkpoint(
+                lambda _, xs: ((), chunk_fn(xs[0] * Cq, xs[1], xs[2])))
+            _, hs = jax.lax.scan(body, (), (jnp.arange(n), Fqs, qcs))
+            h = jnp.moveaxis(hs, 0, 1).reshape(B, S, H, -1)
+        new_cache = None
+        if mode == "prefill":
+            # final recurrent state for decode continuation
+            w = F[:, -1:, :] - F + i_raw                 # (B,S,H)
+            ms = jnp.max(w, axis=1)                      # (B,H)
+            wexp = jnp.exp(w - ms[:, None, :])
+            Cf = jnp.einsum("bsn,bsnk,bsnv->bnkv", wexp,
+                            k.astype(jnp.float32), v.astype(jnp.float32))
+            nf = jnp.einsum("bsn,bsnk->bnk", wexp, k.astype(jnp.float32))
+            new_cache = {"C": Cf, "n": nf, "m": ms, "conv": new_conv}
+
+    h = _groupnorm_heads(h, params["gn_scale"]).reshape(B, -1, di).astype(x.dtype)
+    h = h + params["skip_scale"].astype(x.dtype) * xc
+    y = h * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(x.dtype)), new_cache
+
+
+# ===========================================================================
+# sLSTM (xLSTM) — scalar memory, sequential recurrence
+# ===========================================================================
+def slstm_specs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    f = int(cfg.slstm_proj_factor * d)
+    sp = {}
+    for g in ("z", "i", "f", "o"):
+        sp[f"w_{g}"] = ParamSpec((d, d), ("embed", "mlp"))
+        sp[f"r_{g}"] = _block_diag_spec(H, d)
+        sp[f"b_{g}"] = ParamSpec((d,), ("mlp",), "zeros")
+    sp["gn_scale"] = ParamSpec((H, d // H), ("heads", "head_dim"), "zeros")
+    sp["ffn"] = {
+        "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    return sp
+
+
+def slstm_init_cache(cfg: ModelConfig, batch: int) -> Dict:
+    d = cfg.d_model
+    return {
+        "sc": jnp.zeros((batch, d), jnp.float32),
+        "sn": jnp.full((batch, d), 1e-6, jnp.float32),
+        "sm": jnp.full((batch, d), -1e30, jnp.float32),
+        "sh": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(params, x_t, state, cfg):
+    """x_t: (B,d) pre-projected inputs per gate; state: (c,n,m,h)."""
+    c, n, m, h = state
+    H = cfg.num_heads
+    hd = h.astype(jnp.float32)
+
+    def gate(name):
+        wx = x_t[name]
+        rh = _block_diag_apply(params[f"r_{name}"], hd, H)
+        return wx + rh + params[f"b_{name}"].astype(jnp.float32)
+
+    z = jnp.tanh(gate("z"))
+    i_raw = gate("i")
+    f_raw = gate("f")
+    o = jax.nn.sigmoid(gate("o"))
+    logf = -jax.nn.softplus(-f_raw)
+    m1 = jnp.maximum(logf + m, i_raw)
+    i1 = jnp.exp(i_raw - m1)
+    f1 = jnp.exp(logf + m - m1)
+    c1 = f1 * c + i1 * z
+    n1 = f1 * n + i1
+    h1 = o * c1 / jnp.maximum(n1, 1e-6)
+    return (c1, n1, m1, h1)
+
+
+def slstm_apply(params, x, cfg: ModelConfig, *, mode: str,
+                cache: Optional[Dict] = None) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    B, S, d = x.shape
+    H = cfg.num_heads
+    # pre-compute the input contributions for all gates (parallel over S)
+    xg = {g: jnp.einsum("bsd,de->bse", x, params[f"w_{g}"].astype(x.dtype))
+          .astype(jnp.float32) for g in ("z", "i", "f", "o")}
+
+    if cache is not None:
+        state0 = (cache["sc"], cache["sn"], cache["sm"], cache["sh"])
+    else:
+        z0 = jnp.zeros((B, d), jnp.float32)
+        state0 = (z0, jnp.full((B, d), 1e-6, jnp.float32),
+                  jnp.full((B, d), -1e30, jnp.float32), z0)
+
+    if mode == "decode":
+        xt = {g: xg[g][:, 0] for g in xg}
+        c1, n1, m1, h1 = _slstm_cell(params, xt, state0, cfg)
+        hs = h1[:, None]
+        new_cache = {"sc": c1, "sn": n1, "sm": m1, "sh": h1}
+    else:
+        def step(state, xt):
+            s1 = _slstm_cell(params, xt, state, cfg)
+            return s1, s1[3]
+
+        xs = {g: jnp.swapaxes(xg[g], 0, 1) for g in xg}  # (S,B,d)
+        final, hs = jax.lax.scan(step, state0, xs)
+        hs = jnp.swapaxes(hs, 0, 1)                      # (B,S,d)
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"sc": final[0], "sn": final[1], "sm": final[2],
+                         "sh": final[3]}
+
+    y = _groupnorm_heads(hs.reshape(B, -1, H, d // H),
+                         params["gn_scale"]).reshape(B, -1, d).astype(x.dtype)
+    # post sLSTM gated FFN (proj factor 4/3)
+    act = activation(cfg.act)
+    f = params["ffn"]
+    g = jnp.einsum("bsd,df->bsf", y, f["wi_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", y, f["wi_up"].astype(x.dtype))
+    y = jnp.einsum("bsf,fd->bsd", act(g) * u, f["wo"].astype(x.dtype))
+    return y, new_cache

@@ -1,0 +1,275 @@
+"""Decoder-only transformer trunk.
+
+Composes the block library (attention / MLA / MoE / RG-LRU / mLSTM / sLSTM)
+according to ``cfg.layer_kinds``:
+
+- layers are grouped into repeating *periods* (RecurrentGemma: (rglru,
+  rglru, local); xLSTM: 7×mlstm+1×slstm; dense models: period 1) and the
+  repeated periods are executed with ``jax.lax.scan`` over **stacked**
+  params — one compiled layer body regardless of depth, which keeps the
+  88-layer dry-runs compact;
+- ``moe.first_dense_layers`` leading layers (DeepSeek-V2) and any trailing
+  remainder (26 = 8×3 + 2) run unstacked;
+- ``cfg.remat`` wraps the scan body in ``jax.checkpoint`` for training.
+
+Caches follow the same grouping: {"pos", "pre": (...), "scan": (stacked,)*P,
+"rem": (...)}.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ATTENTION_KINDS, ATTN, LOCAL_ATTN, MLA, MLSTM,
+                          RGLRU, SLSTM, SWA, ModelConfig)
+from repro.models import attention, mlp, recurrent
+from repro.models.base import (ParamSpec, apply_norm, norm_spec)
+from repro.sharding import cast_weight, constrain_batch, constrain_logits
+
+
+def _needs_mlp(cfg: ModelConfig, kind: str) -> bool:
+    if kind in (MLSTM, SLSTM):
+        return False          # xLSTM blocks are self-contained
+    return cfg.d_ff > 0 or cfg.moe.enabled
+
+
+def _kind_specs(cfg: ModelConfig, kind: str):
+    if kind == MLA:
+        return attention.mla_specs(cfg)
+    if kind in (ATTN, SWA, LOCAL_ATTN):
+        return attention.specs(cfg)
+    if kind == RGLRU:
+        return recurrent.rglru_specs(cfg)
+    if kind == MLSTM:
+        return recurrent.mlstm_specs(cfg)
+    if kind == SLSTM:
+        return recurrent.slstm_specs(cfg)
+    raise ValueError(kind)
+
+
+def layer_specs(cfg: ModelConfig, kind: str, moe_layer: bool) -> Dict:
+    sp: Dict[str, Any] = {
+        "norm1": norm_spec(cfg, cfg.d_model),
+        "mix": _kind_specs(cfg, kind),
+    }
+    if _needs_mlp(cfg, kind):
+        sp["norm2"] = norm_spec(cfg, cfg.d_model)
+        sp["mlp"] = mlp.moe_specs(cfg) if moe_layer else mlp.specs(cfg)
+    return sp
+
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int) -> Dict:
+    if kind in ATTENTION_KINDS:
+        return attention.init_cache(cfg, batch, max_len, kind)
+    if kind == RGLRU:
+        return recurrent.rglru_init_cache(cfg, batch)
+    if kind == MLSTM:
+        return recurrent.mlstm_init_cache(cfg, batch)
+    if kind == SLSTM:
+        return recurrent.slstm_init_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+def apply_layer(params, x, cfg: ModelConfig, kind: str, moe_layer: bool, *,
+                mode: str, positions, cache, impl: str = "xla",
+                max_len=None):
+    """One residual block. Returns (x, aux_loss_delta, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(params["norm1"], x, cfg)
+    if kind in ATTENTION_KINDS:
+        y, new_cache = attention.apply(params["mix"], h, cfg, mode=mode,
+                                       positions=positions, cache=cache,
+                                       kind=kind, impl=impl, max_len=max_len)
+    elif kind == RGLRU:
+        y, new_cache = recurrent.rglru_apply(params["mix"], h, cfg, mode=mode,
+                                             cache=cache)
+    elif kind == MLSTM:
+        y, new_cache = recurrent.mlstm_apply(params["mix"], h, cfg, mode=mode,
+                                             cache=cache)
+    elif kind == SLSTM:
+        y, new_cache = recurrent.slstm_apply(params["mix"], h, cfg, mode=mode,
+                                             cache=cache)
+    else:
+        raise ValueError(kind)
+    x = constrain_batch(x + y)
+    if "mlp" in params:
+        h = apply_norm(params["norm2"], x, cfg)
+        if moe_layer:
+            y, metrics = mlp.moe_apply(params["mlp"], h, cfg)
+            aux = aux + metrics["moe_aux_loss"] + metrics["moe_z_loss"]
+        else:
+            y = mlp.apply(params["mlp"], h, cfg)
+        x = constrain_batch(x + y)
+    return x, aux, (new_cache if new_cache is not None else {})
+
+
+# ---------------------------------------------------------------------------
+# layer grouping
+# ---------------------------------------------------------------------------
+def _grouping(cfg: ModelConfig):
+    kinds = cfg.layer_kinds
+    n_pre = cfg.moe.first_dense_layers if cfg.moe.enabled else 0
+    body = kinds[n_pre:]
+    pat = cfg.block_pattern or (kinds[n_pre] if body else ATTN,)
+    if isinstance(pat, str):
+        pat = (pat,)
+    P = len(pat)
+    n_periods = len(body) // P
+    n_rem = len(body) - n_periods * P
+    return n_pre, P, n_periods, n_rem, kinds
+
+
+def _is_moe_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    return cfg.moe.enabled and layer_idx >= cfg.moe.first_dense_layers
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    n_pre, P, n_periods, n_rem, kinds = _grouping(cfg)
+    d, V = cfg.d_model, cfg.padded_vocab_size
+    sp: Dict[str, Any] = {
+        "embed": ParamSpec((V, d), ("vocab", "embed"), "normal", scale=0.02),
+        "final_norm": norm_spec(cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec((d, V), ("embed", "vocab"))
+    # pre (unstacked) layers — dense-MLP even in MoE models
+    for i in range(n_pre):
+        sp[f"pre_{i}"] = layer_specs(cfg, kinds[i], moe_layer=False)
+    # scanned periods: stack each period-position's specs over n_periods
+    for p in range(P):
+        kind = kinds[n_pre + p]
+        base = layer_specs(cfg, kind, _is_moe_layer(cfg, n_pre + p))
+        sp[f"scan_{p}"] = jax.tree.map(
+            lambda s: ParamSpec((n_periods,) + s.shape, ("stack",) + s.axes,
+                                s.init, s.scale, s.dtype),
+            base, is_leaf=lambda x: isinstance(x, ParamSpec))
+    # remainder layers
+    for r in range(n_rem):
+        li = n_pre + n_periods * P + r
+        sp[f"rem_{r}"] = layer_specs(cfg, kinds[li], _is_moe_layer(cfg, li))
+    return sp
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    n_pre, P, n_periods, n_rem, kinds = _grouping(cfg)
+    cache: Dict[str, Any] = {"pos": jnp.zeros((batch,), jnp.int32)}
+    for i in range(n_pre):
+        cache[f"pre_{i}"] = _layer_cache(cfg, kinds[i], batch, max_len)
+    for p in range(P):
+        one = _layer_cache(cfg, kinds[n_pre + p], batch, max_len)
+        cache[f"scan_{p}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape), one)
+    for r in range(n_rem):
+        li = n_pre + n_periods * P + r
+        cache[f"rem_{r}"] = _layer_cache(cfg, kinds[li], batch, max_len)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, *, mode: str,
+            cache: Optional[Dict] = None, extra_embeds=None,
+            impl: str = "xla", prefill_max_len: Optional[int] = None,
+            last_logit_only: bool = False,
+            ) -> Tuple[jnp.ndarray, Optional[Dict], Dict]:
+    """Returns (logits, new_cache, metrics).
+
+    tokens: (B, S) int32 (S == 1 in decode mode).
+    extra_embeds: (B, N, d) prepended modality embeddings (VLM stub).
+    """
+    n_pre, P, n_periods, n_rem, kinds = _grouping(cfg)
+    B, S = tokens.shape
+    x = constrain_batch(params["embed"].astype(cfg.compute_dtype)[tokens])
+    n_prefix = 0
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(x.dtype), x], axis=1)
+        n_prefix = extra_embeds.shape[1]
+        S = S + n_prefix
+
+    if mode == "decode":
+        assert cache is not None and S == 1
+        positions = cache["pos"][:, None]                 # (B,1)
+    else:
+        positions = jnp.arange(S)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+
+    # --- pre layers --------------------------------------------------------
+    for i in range(n_pre):
+        x, aux, nc = apply_layer(params[f"pre_{i}"], x, cfg, kinds[i], False,
+                                 mode=mode, positions=positions,
+                                 cache=None if cache is None else cache[f"pre_{i}"],
+                                 impl=impl, max_len=prefill_max_len)
+        aux_total += aux
+        new_cache[f"pre_{i}"] = nc
+
+    # --- scanned periods -----------------------------------------------------
+    if n_periods > 0:
+        scan_params = tuple(params[f"scan_{p}"] for p in range(P))
+        scan_caches = tuple(
+            (cache[f"scan_{p}"] if cache is not None else {}) for p in range(P))
+        period_kinds = tuple(kinds[n_pre + p] for p in range(P))
+        period_moe = tuple(_is_moe_layer(cfg, n_pre + p) for p in range(P))
+
+        def body(carry, xs):
+            xc, auxc = carry
+            pslices, cslices = xs
+            ncs = []
+            for p in range(P):
+                xc, aux, nc = apply_layer(pslices[p], xc, cfg, period_kinds[p],
+                                          period_moe[p], mode=mode,
+                                          positions=positions,
+                                          cache=cslices[p] or None, impl=impl,
+                                          max_len=prefill_max_len)
+                auxc = auxc + aux
+                ncs.append(nc)
+            return (xc, auxc), tuple(ncs)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+        (x, aux_total), scan_new = jax.lax.scan(
+            body, (x, aux_total), (scan_params, scan_caches))
+        for p in range(P):
+            new_cache[f"scan_{p}"] = scan_new[p]
+
+    # --- remainder layers -----------------------------------------------------
+    for r in range(n_rem):
+        li = n_pre + n_periods * P + r
+        x, aux, nc = apply_layer(params[f"rem_{r}"], x, cfg, kinds[li],
+                                 _is_moe_layer(cfg, li), mode=mode,
+                                 positions=positions,
+                                 cache=None if cache is None else cache[f"rem_{r}"],
+                                 impl=impl, max_len=prefill_max_len)
+        aux_total += aux
+        new_cache[f"rem_{r}"] = nc
+
+    x = apply_norm(params["final_norm"], x, cfg)
+    if n_prefix and mode != "decode":
+        x = x[:, n_prefix:]
+    if last_logit_only:
+        x = x[:, -1:]
+    if cfg.tie_embeddings:
+        head = cast_weight(params["embed"], x.dtype, ("vocab", "embed")).T
+    else:
+        head = cast_weight(params["lm_head"], x.dtype, ("embed", "vocab"))
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = constrain_logits(logits.astype(jnp.float32))
+    if cfg.logits_softcap:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    if cfg.padded_vocab_size != cfg.vocab_size:
+        # mask pad columns exactly (shard-friendly elementwise iota compare)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+
+    metrics = {"aux_loss": aux_total}
+    if mode == "train":
+        return logits, None, metrics
+    if mode in ("prefill", "decode"):
+        new_cache["pos"] = (jnp.full((B,), S, jnp.int32) if mode == "prefill"
+                            else cache["pos"] + 1)
+        return logits, new_cache, metrics
+    raise ValueError(mode)

@@ -1,0 +1,199 @@
+"""Optimizers, implemented from scratch (optax is not available offline).
+
+The interface mirrors optax closely enough to be familiar:
+
+    opt = make_optimizer(train_cfg)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, step)
+    params = jax.tree.map(lambda p, u: p + u, params, updates)
+
+All states are pytrees shaped like the params, so the same PartitionSpec
+tree shards both (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.pytree import tree_global_norm
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]   # (grads, state, params, step) -> (updates, state)
+    name: str = "opt"
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype) if hasattr(ref, "dtype") else x
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# SGD / momentum
+# ---------------------------------------------------------------------------
+def sgd(lr_fn: Callable) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        updates = jax.tree.map(lambda g: (-lr * g.astype(jnp.float32)).astype(g.dtype), grads)
+        return updates, state
+
+    return Optimizer(init, update, "sgd")
+
+
+def momentum(lr_fn: Callable, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        new_m = jax.tree.map(lambda m, g: beta * m + g.astype(jnp.float32), state, grads)
+        updates = jax.tree.map(lambda m, g: (-lr * m).astype(g.dtype), new_m, grads)
+        return updates, new_m
+
+    return Optimizer(init, update, "momentum")
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adam(lr_fn, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    return adamw(lr_fn, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m / bc1
+            vhat = v / bc2
+            u = -lr * (mhat / (jnp.sqrt(vhat) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m, v
+
+        flat_u, flat_m, flat_v = [], [], []
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_m = treedef.flatten_up_to(state.mu)
+        leaves_v = treedef.flatten_up_to(state.nu)
+        leaves_p = treedef.flatten_up_to(params)
+        for g, m, v, p in zip(leaves_g, leaves_m, leaves_v, leaves_p):
+            u, m2, v2 = upd(g, m, v, p)
+            flat_u.append(u); flat_m.append(m2); flat_v.append(v2)
+        updates = jax.tree.unflatten(treedef, flat_u)
+        new_state = AdamState(mu=jax.tree.unflatten(treedef, flat_m),
+                              nu=jax.tree.unflatten(treedef, flat_v))
+        return updates, new_state
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment — the memory-lean option for 34B+ dry runs)
+# ---------------------------------------------------------------------------
+class AdafactorState(NamedTuple):
+    vr: Any   # row statistics (or full v for <2D tensors)
+    vc: Any   # col statistics (or () placeholder)
+
+
+def adafactor(lr_fn, eps=1e-30, clip_threshold=1.0, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        def rows(p):
+            if p.ndim < 2:
+                return jnp.zeros(p.shape, jnp.float32)
+            return jnp.zeros(p.shape[:-1], jnp.float32)
+
+        def cols(p):
+            if p.ndim < 2:
+                return jnp.zeros((), jnp.float32)
+            return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+
+        return AdafactorState(vr=jax.tree.map(rows, params),
+                              vc=jax.tree.map(cols, params))
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-0.8)
+
+        def upd(g, vr, vc, p):
+            g32 = g.astype(jnp.float32)
+            sq = jnp.square(g32) + eps
+            if p.ndim < 2:
+                vr = beta2 * vr + (1 - beta2) * sq
+                u = g32 / (jnp.sqrt(vr) + eps)
+            else:
+                vr = beta2 * vr + (1 - beta2) * jnp.mean(sq, axis=-1)
+                vc = beta2 * vc + (1 - beta2) * jnp.mean(sq, axis=-2)
+                rfac = jnp.sqrt(vr / (jnp.mean(vr, axis=-1, keepdims=True) + eps))
+                u = g32 / (rfac[..., None] * jnp.sqrt(vc)[..., None, :] + eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr * (u + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), vr, vc
+
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_r = treedef.flatten_up_to(state.vr)
+        leaves_c = treedef.flatten_up_to(state.vc)
+        leaves_p = treedef.flatten_up_to(params)
+        fu, fr, fc = [], [], []
+        for g, r, c, p in zip(leaves_g, leaves_r, leaves_c, leaves_p):
+            u, r2, c2 = upd(g, r, c, p)
+            fu.append(u); fr.append(r2); fc.append(c2)
+        return (jax.tree.unflatten(treedef, fu),
+                AdafactorState(jax.tree.unflatten(treedef, fr),
+                               jax.tree.unflatten(treedef, fc)))
+
+    return Optimizer(init, update, "adafactor")
+
+
+# ---------------------------------------------------------------------------
+# Factory
+# ---------------------------------------------------------------------------
+def make_optimizer(train_cfg, lr_fn: Optional[Callable] = None) -> Optimizer:
+    from repro.optim.schedules import linear_warmup_cosine
+
+    lr_fn = lr_fn or linear_warmup_cosine(
+        train_cfg.learning_rate, train_cfg.warmup_steps, train_cfg.total_steps)
+    kind = train_cfg.optimizer
+    if kind == "sgd":
+        return sgd(lr_fn)
+    if kind == "momentum":
+        return momentum(lr_fn, beta=train_cfg.beta1)
+    if kind == "adam":
+        return adamw(lr_fn, b1=train_cfg.beta1, b2=train_cfg.beta2,
+                     eps=train_cfg.eps, weight_decay=0.0)
+    if kind == "adamw":
+        return adamw(lr_fn, b1=train_cfg.beta1, b2=train_cfg.beta2,
+                     eps=train_cfg.eps, weight_decay=train_cfg.weight_decay)
+    if kind == "adafactor":
+        return adafactor(lr_fn, weight_decay=train_cfg.weight_decay)
+    raise ValueError(f"unknown optimizer {kind!r}")

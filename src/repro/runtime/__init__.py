@@ -1,0 +1,6 @@
+from repro.runtime.transport import FaultSpec, Message, Network  # noqa: F401
+from repro.runtime.reliable import ReliableMessenger, RequestTimeout  # noqa: F401
+from repro.runtime.jobs import JobSpec, JobStatus  # noqa: F401
+from repro.runtime.scp import FlareRuntime  # noqa: F401
+from repro.runtime.streaming import MetricCollector, SummaryWriter  # noqa: F401
+from repro.runtime.provision import Provisioner, StartupKit  # noqa: F401

@@ -1,0 +1,169 @@
+"""ReliableMessage (paper §4.1), faithfully:
+
+  1. the requester sends the request; if delivery fails it retries a moment
+     later, repeating until sent or until the timeout elapses (=> abort);
+  2. once sent, the requester waits for the response; the peer pushes the
+     result as soon as processing finishes; *in parallel* the requester
+     periodically sends QUERY messages to pull the result, so the response
+     arrives through whichever path survives (push or query-pull);
+  3. the receiver deduplicates by msg_id — a request is executed exactly
+     once no matter how many retries/duplicates arrive — and keeps the
+     result cached so late queries can still fetch it.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+import uuid
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.runtime.transport import Message, Network
+
+
+class RequestTimeout(RuntimeError):
+    """Raised when a reliable exchange exceeds its deadline (=> job abort)."""
+
+
+_PENDING = b"\x00__PENDING__"
+_counter = itertools.count()
+
+
+class ReliableMessenger:
+    """One per endpoint; handles both the requester and responder roles."""
+
+    def __init__(self, network: Network, me: str,
+                 retry_interval: float = 0.02, default_timeout: float = 10.0):
+        self.net = network
+        self.me = me
+        self.retry_interval = retry_interval
+        self.default_timeout = default_timeout
+        self.inbox = network.register(me)
+        self._results: Dict[str, bytes] = {}          # responder: msg_id -> result
+        self._inflight: Dict[str, threading.Event] = {}
+        self._responses: Dict[str, bytes] = {}        # requester: msg_id -> resp
+        self._seen: Dict[str, bool] = {}              # responder dedup
+        self._handlers: Dict[str, Callable[[Message], bytes]] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._pump, daemon=True,
+                                        name=f"rm-{me}")
+        self._thread.start()
+
+    def _send(self, msg_id: str, kind: str, receiver: str, topic: str,
+              payload: bytes, attempt: int = 0) -> None:
+        self.net.send(Message(msg_id, attempt, kind, self.me, receiver, topic,
+                              payload))
+
+    # ------------------------------------------------------------ responder
+    def register_handler(self, topic: str, fn: Callable[[Message], bytes]) -> None:
+        with self._lock:
+            self._handlers[topic] = fn
+
+    def _handle_request(self, msg: Message) -> None:
+        with self._lock:
+            if msg.msg_id in self._seen:            # dedup: execute once
+                result = self._results.get(msg.msg_id)
+                if result is not None:              # re-push cached result
+                    self._send(msg.msg_id, "RESP", msg.sender, msg.topic,
+                               result, attempt=msg.attempt)
+                return
+            handler = self._match_handler(msg.topic)
+            if handler is None:
+                # no handler *yet* (job process still starting): stay unseen
+                # so a retry executes once the handler is registered
+                return
+            self._seen[msg.msg_id] = True
+        result = handler(msg)                        # may take a while
+        with self._lock:
+            self._results[msg.msg_id] = result
+        self._send(msg.msg_id, "RESP", msg.sender, msg.topic, result,
+                   attempt=msg.attempt)
+
+    def _match_handler(self, topic: str):
+        if topic in self._handlers:
+            return self._handlers[topic]
+        for t, fn in self._handlers.items():
+            if t.endswith("*") and topic.startswith(t[:-1]):
+                return fn
+        return None
+
+    def _handle_query(self, msg: Message) -> None:
+        with self._lock:
+            result = self._results.get(msg.msg_id)
+        self._send(msg.msg_id, "RESP", msg.sender, msg.topic,
+                   result if result is not None else _PENDING,
+                   attempt=msg.attempt)
+
+    # ------------------------------------------------------------ requester
+    def request(self, target: str, topic: str, payload: bytes,
+                timeout: Optional[float] = None) -> bytes:
+        """Blocking reliable exchange. Raises RequestTimeout on deadline."""
+        timeout = timeout or self.default_timeout
+        msg_id = f"{self.me}-{next(_counter)}-{uuid.uuid4().hex[:8]}"
+        ev = threading.Event()
+        with self._lock:
+            self._inflight[msg_id] = ev
+        deadline = time.monotonic() + timeout
+        attempt = 0
+        try:
+            while time.monotonic() < deadline:
+                # (re)send the request — receiver-side dedup makes this safe
+                self.net.send(Message(msg_id, attempt, "REQ", self.me, target,
+                                      topic, payload))
+                attempt += 1
+                if ev.wait(self.retry_interval):
+                    break
+                # pull path: query for a result the push may have lost
+                self.net.send(Message(msg_id, attempt, "QUERY", self.me,
+                                      target, topic, b""))
+                attempt += 1
+                if ev.wait(self.retry_interval):
+                    break
+            else:
+                raise RequestTimeout(
+                    f"{self.me} -> {target} [{topic}] timed out after {timeout}s")
+            with self._lock:
+                return self._responses.pop(msg_id)
+        finally:
+            with self._lock:
+                self._inflight.pop(msg_id, None)
+                self._responses.pop(msg_id, None)
+
+    def notify(self, target: str, topic: str, payload: bytes) -> None:
+        """Fire-and-forget EVENT (metric streaming uses this)."""
+        msg_id = f"{self.me}-ev-{next(_counter)}-{uuid.uuid4().hex[:8]}"
+        self.net.send(Message(msg_id, 0, "EVENT", self.me, target, topic,
+                              payload))
+
+    # ------------------------------------------------------------ pump
+    def _pump(self) -> None:
+        while not self._stop.is_set():
+            try:
+                msg = self.inbox.get(timeout=0.05)
+            except Exception:
+                continue
+            if msg.kind == "REQ":
+                # handlers run off-pump: a relaying handler (LGS/LGC) issues
+                # its own reliable request and must not block RESP delivery
+                t = threading.Thread(target=self._handle_request, args=(msg,),
+                                     daemon=True)
+                t.start()
+            elif msg.kind == "QUERY":
+                self._handle_query(msg)
+            elif msg.kind == "RESP":
+                if msg.payload == _PENDING:
+                    continue
+                with self._lock:
+                    ev = self._inflight.get(msg.msg_id)
+                    if ev is not None and msg.msg_id not in self._responses:
+                        self._responses[msg.msg_id] = msg.payload
+                        ev.set()
+            elif msg.kind == "EVENT":
+                handler = self._match_handler(msg.topic)
+                if handler is not None:
+                    handler(msg)
+
+    def close(self) -> None:
+        self._stop.set()
+        self._thread.join(timeout=1.0)

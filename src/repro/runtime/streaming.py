@@ -1,0 +1,79 @@
+"""Metric streaming (paper §5.2): FLARE's experiment-tracking feature.
+
+Clients create a :class:`SummaryWriter` inside their training code and call
+``add_scalar``; scalars stream (fire-and-forget EVENTs over the runtime) to
+the server-side :class:`MetricCollector`, which stores per-site series and
+can export a TensorBoard-style JSON dump (the Fig. 6 artifact).
+"""
+from __future__ import annotations
+
+import json
+import struct
+import threading
+import time
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.runtime.reliable import ReliableMessenger
+from repro.runtime.transport import Message
+
+_FMT = "!d i"   # value, step
+
+
+def _encode(tag: str, value: float, step: int) -> bytes:
+    head = tag.encode()
+    return struct.pack("!H", len(head)) + head + struct.pack(_FMT, value, step)
+
+
+def _decode(b: bytes) -> Tuple[str, float, int]:
+    (n,) = struct.unpack_from("!H", b, 0)
+    tag = b[2:2 + n].decode()
+    value, step = struct.unpack_from(_FMT, b, 2 + n)
+    return tag, value, step
+
+
+class SummaryWriter:
+    """Client-side API mirroring ``nvflare.client.tracking.SummaryWriter``."""
+
+    def __init__(self, messenger: ReliableMessenger, server: str, job_id: str,
+                 site: str):
+        self._m = messenger
+        self._server = server
+        self._topic = f"job/{job_id}/metrics"
+        self._site = site
+
+    def add_scalar(self, tag: str, value: float, global_step: int = 0) -> None:
+        payload = _encode(f"{self._site}/{tag}", float(value), int(global_step))
+        self._m.notify(self._server, self._topic, payload)
+
+
+class MetricCollector:
+    """Server-side sink; one per job. Thread-safe."""
+
+    def __init__(self):
+        self._series: Dict[str, List[Tuple[int, float, float]]] = defaultdict(list)
+        self._lock = threading.Lock()
+
+    def on_event(self, msg: Message) -> bytes:
+        tag, value, step = _decode(msg.payload)
+        with self._lock:
+            self._series[tag].append((step, value, time.time()))
+        return b""
+
+    def series(self, tag: str) -> List[Tuple[int, float]]:
+        with self._lock:
+            return [(s, v) for s, v, _ in sorted(self._series.get(tag, []))]
+
+    def tags(self) -> List[str]:
+        with self._lock:
+            return sorted(self._series)
+
+    def export_tensorboard_json(self, path: Optional[str] = None) -> str:
+        with self._lock:
+            dump = {tag: [[t, s, v] for (s, v, t) in pts]
+                    for tag, pts in self._series.items()}
+        out = json.dumps(dump, indent=1)
+        if path:
+            with open(path, "w") as f:
+                f.write(out)
+        return out

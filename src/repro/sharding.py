@@ -1,0 +1,306 @@
+"""Logical-axis sharding rules.
+
+Every tensor in the system is annotated with *logical* axis names
+("embed", "heads", "mlp", "vocab", "batch", ...).  :func:`spec_for` maps
+those to a :class:`jax.sharding.PartitionSpec` for a concrete mesh, with
+**divisibility fallback**: if a dimension is not divisible by the product of
+its assigned mesh axes, mesh axes are dropped (innermost first) until it is.
+This is what lets one rule table serve ten architectures whose head counts /
+vocab sizes are not all multiples of 16.
+
+Rule table (MaxText-style 2-D "fsdp + tensor"):
+
+  batch   -> ("pod", "data")      activations' batch dim
+  seq     -> None                 (sequence kept whole except long-decode cache)
+  cache_seq -> "data"             flash-decoding style KV-page sharding
+  embed   -> ("data", "model")    weight d_model dim  == FSDP storage sharding
+  embed_nofsdp -> None            small models: replicate instead of FSDP
+  heads   -> "model"              attention-head tensor parallelism
+  kv_heads-> "model"
+  mlp     -> "model"              d_ff tensor parallelism
+  experts -> "model"              expert parallelism
+  vocab   -> "model"
+  head_dim, qk, v, lora, state -> None
+
+The fallback drops axes *for that tensor only* and records the decision so
+the dry-run can report which tensors fell back (useful in §Roofline).
+"""
+from __future__ import annotations
+
+import logging
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+logger = logging.getLogger(__name__)
+
+Axes = Tuple[Optional[Tuple[str, ...]], ...]
+
+# logical axis -> tuple of mesh axes (in sharding-priority order)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "cache_seq": ("data",),
+    "embed": ("data", "model"),
+    "embed_expert": ("data", "model"),  # expert-weight d_model (decode keeps FSDP)
+    "embed_tensor": ("model",),      # d_model as a *contraction output* (o_proj in)
+    "embed_nofsdp": (),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "vocab": ("model",),
+    "head_dim": (),
+    "qk": (),
+    "v": (),
+    "lora": (),
+    "state": (),
+    "stack": (),                     # stacked-layer leading dim (scan)
+    "window": (),
+    "frames": (),
+    "pos": (),
+    "conv": (),
+}
+
+# Decisions recorded by the most recent spec_for calls: name -> (requested, used)
+FALLBACKS: Dict[str, Tuple[str, str]] = {}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def spec_for(
+    logical_axes: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+    rules: Optional[Dict[str, Tuple[str, ...]]] = None,
+    fsdp: bool = True,
+    name: str = "",
+) -> P:
+    """PartitionSpec for `shape` annotated with `logical_axes`."""
+    rules = rules or DEFAULT_RULES
+    sizes = _mesh_axis_sizes(mesh)
+    assert len(logical_axes) == len(shape), (logical_axes, shape, name)
+
+    def rule_for(logical: str) -> Tuple[str, ...]:
+        key = "embed_nofsdp" if (not fsdp and logical == "embed") else logical
+        return tuple(a for a in rules.get(key, ()) if a in sizes)
+
+    # Two-pass allocation: dims whose rule names a single mesh axis (tensor
+    # parallelism: heads/mlp/experts/vocab) claim axes first; multi-axis
+    # rules (FSDP "embed") then take whatever remains.  A mesh axis is used
+    # at most once per tensor (GSPMD requirement).
+    order = sorted(
+        range(len(shape)),
+        key=lambda i: (len(rule_for(logical_axes[i])) if logical_axes[i] else 99),
+    )
+    used_axes: set = set()
+    entries: list = [None] * len(shape)
+    for i in order:
+        logical, dim = logical_axes[i], shape[i]
+        if logical is None:
+            continue
+        mesh_axes = [a for a in rule_for(logical) if a not in used_axes]
+        kept = list(mesh_axes)
+        while kept:  # divisibility fallback: drop least-priority axes
+            prod = 1
+            for a in kept:
+                prod *= sizes[a]
+            if dim % prod == 0:
+                break
+            kept.pop()
+        if kept != mesh_axes and name:
+            FALLBACKS[f"{name}:{logical}"] = (
+                "x".join(mesh_axes) or "-", "x".join(kept) or "-")
+        used_axes.update(kept)
+        if len(kept) == 1:
+            entries[i] = kept[0]
+        elif kept:
+            entries[i] = tuple(kept)
+    return P(*entries)
+
+
+def named_sharding(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                   shape: Sequence[int], **kw) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(logical_axes, shape, mesh, **kw))
+
+
+def tree_specs(axes_tree, shape_tree, mesh: Mesh, fsdp: bool = True):
+    """Map spec_for over parallel pytrees of logical-axes and shapes."""
+    return jax.tree.map(
+        lambda ax, shp: spec_for(ax, shp, mesh, fsdp=fsdp),
+        axes_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def clear_fallbacks() -> None:
+    FALLBACKS.clear()
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (MaxText-style)
+# ---------------------------------------------------------------------------
+# Weight shardings alone let GSPMD propagate an FSDP (feature-dim) sharding
+# onto activations, which destroys batch sharding and replicates attention
+# scores (observed +100GB/device).  The launcher installs the ambient mesh +
+# batch axes here; model code calls `constrain_*` at the residual-stream
+# boundaries.  No-ops when nothing is installed (CPU smoke tests).
+_ACT_MESH: list = [None, (), ("model",)]   # [mesh, batch_axes, vocab_axes]
+
+
+def set_activation_mesh(mesh: Optional[Mesh], batch_axes: Tuple[str, ...] = (),
+                        vocab_axes: Tuple[str, ...] = ("model",)) -> None:
+    _ACT_MESH[0] = mesh
+    _ACT_MESH[1] = tuple(batch_axes)
+    _ACT_MESH[2] = tuple(vocab_axes)
+
+
+def _wsc(x, spec):
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_batch(x):
+    """Constrain the residual stream: dim0=batch on the batch axes and —
+    when divisible — dim1=seq on "model" (Megatron-style sequence
+    parallelism: the saved remat stream shrinks model_size x; GSPMD inserts
+    the per-layer seq all-gather / reduce-scatter pair)."""
+    mesh, baxes = _ACT_MESH[0], _ACT_MESH[1]
+    if mesh is None or not baxes:
+        return x
+    sizes = _mesh_axis_sizes(mesh)
+    prod = 1
+    for a in baxes:
+        prod *= sizes.get(a, 1)
+    if x.shape[0] % prod != 0:
+        return x
+    seq = None
+    if (x.ndim >= 3 and "model" in sizes and x.shape[1] > 1
+            and x.shape[1] % sizes["model"] == 0 and "model" not in baxes):
+        seq = "model"
+    return _wsc(x, P(baxes, seq, *([None] * (x.ndim - 2))))
+
+
+def constrain_logits(x):
+    """(B, S, V): batch axes on dim0, vocab axes on the last dim."""
+    mesh, baxes, vaxes = _ACT_MESH
+    if mesh is None:
+        return x
+    sizes = _mesh_axis_sizes(mesh)
+    bprod = 1
+    for a in baxes:
+        bprod *= sizes.get(a, 1)
+    vprod = 1
+    for a in vaxes:
+        vprod *= sizes.get(a, 1)
+    b = baxes if (baxes and x.shape[0] % bprod == 0) else None
+    v = vaxes if (vaxes and x.shape[-1] % vprod == 0) else None
+    if b is None and v is None:
+        return x
+    return _wsc(x, P(b, *([None] * (x.ndim - 2)), v))
+
+
+def constrain_moe(x, expert_dim: Optional[int] = None):
+    """MoE dispatch-space tensors: (G, ...) with an optional expert dim.
+
+    G (dim 0) -> batch axes; `expert_dim` (if given and divisible) -> "model"
+    — e.g. (G,Tg,E,C) masks use expert_dim=2, (G,E,C,*) buffers use 1."""
+    mesh, baxes = _ACT_MESH[0], _ACT_MESH[1]
+    if mesh is None or not baxes:
+        return x
+    sizes = _mesh_axis_sizes(mesh)
+    bprod = 1
+    for a in baxes:
+        bprod *= sizes.get(a, 1)
+    g = baxes if x.shape[0] % bprod == 0 else None
+    entries = [None] * x.ndim
+    entries[0] = g
+    if (expert_dim is not None and "model" in sizes
+            and x.shape[expert_dim] % sizes["model"] == 0):
+        entries[expert_dim] = "model"
+    return _wsc(x, P(*entries))
+
+
+def constrain_heads(x, head_dim_index: int = 2):
+    """(B, S, H, hd) attention-space tensors: batch axes on dim0, heads on
+    "model" when divisible.  Used where a broadcast/concat would otherwise
+    lose the head sharding (e.g. MLA's shared k_pe broadcast)."""
+    mesh, baxes = _ACT_MESH[0], _ACT_MESH[1]
+    if mesh is None or not baxes:
+        return x
+    sizes = _mesh_axis_sizes(mesh)
+    bprod = 1
+    for a in baxes:
+        bprod *= sizes.get(a, 1)
+    entries = [None] * x.ndim
+    entries[0] = baxes if x.shape[0] % bprod == 0 else None
+    if "model" in sizes and x.shape[head_dim_index] % sizes["model"] == 0:
+        entries[head_dim_index] = "model"
+    return _wsc(x, P(*entries))
+
+
+def cast_weight(w, dtype, logical_axes):
+    """Cast an FSDP-sharded fp32 master weight to compute dtype and pin the
+    bf16 copy to model-axis-only sharding: GSPMD then all-gathers the bf16
+    tensor instead of gathering fp32 and converting after (observed 2x wire
+    bytes on every layer's weights — §Perf iteration C-2)."""
+    w = w.astype(dtype)
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return w
+    sizes = _mesh_axis_sizes(mesh)
+    msz = sizes.get("model", 1)
+    entries = []
+    used = False
+    for ax, dim in zip(logical_axes, w.shape):
+        if (not used and ax in ("heads", "kv_heads", "mlp", "experts",
+                                "vocab") and dim % msz == 0 and msz > 1):
+            entries.append("model")
+            used = True
+        else:
+            entries.append(None)
+    if not used:
+        # no rule dim shards (e.g. Yi's 56 heads): leave GSPMD's choice
+        # alone — an all-None constraint would force replication and UNDO
+        # the salvage sharding (observed 2.8e10 B/step regathers in decode)
+        return w
+    return _wsc(w, P(*entries))
+
+
+def constrain_scores(x):
+    """Chunked-attention score tensors (B, KV, g, Cq, Sk).
+
+    Preference order (§Perf iterations C-1'/C-1''):
+    1. shard the KV-head dim over "model" (zero-collective attention —
+       used with the GQA->MHA expansion when head counts allow);
+    2. else pin Sk to "model": local partial QK^T + small softmax/ctx
+       reductions (flash-decoding style) instead of K/V all-gathers."""
+    mesh, baxes = _ACT_MESH[0], _ACT_MESH[1]
+    if mesh is None:
+        return x
+    sizes = _mesh_axis_sizes(mesh)
+    msz = sizes.get("model", 1)
+    if msz <= 1:
+        return x
+    bprod = 1
+    for a in baxes:
+        bprod *= sizes.get(a, 1)
+    b = baxes if (baxes and x.shape[0] % bprod == 0) else None
+    if x.ndim >= 3 and x.shape[1] % msz == 0:
+        return _wsc(x, P(b, "model", *([None] * (x.ndim - 2))))
+    if x.shape[-1] % msz == 0:
+        return _wsc(x, P(b, *([None] * (x.ndim - 2)), "model"))
+    return x
+
+
+def model_axis_size() -> int:
+    mesh = _ACT_MESH[0]
+    if mesh is None:
+        return 1
+    return _mesh_axis_sizes(mesh).get("model", 1)

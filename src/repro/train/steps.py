@@ -1,0 +1,159 @@
+"""Step functions: loss, train step, prefill step, decode step.
+
+These are the functions the launcher jits (with in/out shardings) and the
+dry-run lowers.  They are mesh-agnostic: distribution comes entirely from
+the shardings attached at jit time (pjit-style; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, TrainConfig
+from repro.models.api import Model
+from repro.optim import make_optimizer
+from repro.optim.optimizers import clip_by_global_norm
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def cross_entropy_loss(logits, labels, z_loss: float = 0.0):
+    """Mean next-token CE in fp32 (+ optional z-loss). logits: (B,S,V).
+
+    The gold logit is gathered with a one-hot contraction, NOT
+    take_along_axis: under pjit the vocab dim is sharded over "model", and
+    a gather across a sharded dim forces GSPMD to replicate the full
+    (B,S,V) fp32 logits (observed +100GB/device in the dry-run).  The
+    one-hot einsum keeps the reduction local + one small all-reduce."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    ce = jnp.mean(logz - gold)
+    if z_loss:
+        ce = ce + z_loss * jnp.mean(jnp.square(logz))
+    return ce
+
+
+def make_train_state(model: Model, train_cfg: TrainConfig, key) -> TrainState:
+    params = model.init(key)
+    opt = make_optimizer(train_cfg)
+    return TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+
+def abstract_train_state(model: Model, train_cfg: TrainConfig) -> TrainState:
+    """ShapeDtypeStruct TrainState — dry-run path, zero allocation."""
+    params = model.abstract()
+    opt = make_optimizer(train_cfg)
+    opt_state = jax.eval_shape(opt.init, params)
+    return TrainState(params, opt_state,
+                      jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def make_train_step(model: Model, train_cfg: TrainConfig, impl: str = "xla"):
+    opt = make_optimizer(train_cfg)
+    M = max(train_cfg.microbatches, 1)
+
+    def loss_fn(params, batch):
+        logits, _, metrics = model.apply(params, batch, mode="train", impl=impl)
+        loss = cross_entropy_loss(logits, batch["labels"], train_cfg.z_loss)
+        loss = loss + metrics.get("aux_loss", 0.0)
+        return loss, metrics
+
+    def grad_fn(params, batch):
+        """Grad accumulation over M microbatches (§Perf iteration E: the
+        live activation set shrinks ~M x; grads accumulate in fp32)."""
+        if M == 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]), batch)
+
+        def one(acc, mb):
+            (l, met), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g32 = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+            acc_g, acc_l, acc_aux = acc
+            return (jax.tree.map(jnp.add, acc_g, g32), acc_l + l,
+                    acc_aux + met.get("aux_loss", 0.0)), ()
+
+        zero = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params),
+                jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+        (gsum, lsum, auxsum), _ = jax.lax.scan(one, zero, micro)
+        grads = jax.tree.map(lambda g, p: (g / M).astype(p.dtype), gsum,
+                             params)
+        return (lsum / M, {"aux_loss": auxsum / M}), grads
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = grad_fn(state.params, batch)
+        if train_cfg.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, train_cfg.grad_clip)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params,
+                                        state.step)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                              state.params, updates)
+        out_metrics = {"loss": loss, "grad_norm": gnorm,
+                       "aux_loss": metrics.get("aux_loss", jnp.zeros(()))}
+        return TrainState(params, opt_state, state.step + 1), out_metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, impl: str = "xla"):
+    def eval_step(params, batch):
+        logits, _, _ = model.apply(params, batch, mode="train", impl=impl)
+        loss = cross_entropy_loss(logits, batch["labels"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]
+                        ).astype(jnp.float32))
+        return {"loss": loss, "accuracy": acc}
+
+    return eval_step
+
+
+def make_prefill_step(model: Model, max_len: Optional[int] = None,
+                      impl: str = "xla"):
+    def prefill_step(params, batch):
+        logits, cache, _ = model.apply(params, batch, mode="prefill",
+                                       impl=impl, prefill_max_len=max_len,
+                                       last_logit_only=True)
+        # only the last-position logits (the generation frontier) were built
+        return logits[:, 0], cache
+
+    return prefill_step
+
+
+def make_decode_step(model: Model, impl: str = "xla"):
+    """One new token against an existing cache — the serve_step the decode
+    shapes lower (decode_32k / long_500k)."""
+
+    def decode_step(params, cache, tokens):
+        logits, cache, _ = model.apply(params, {"tokens": tokens},
+                                       mode="decode", cache=cache, impl=impl)
+        return logits[:, 0], cache
+
+    return decode_step
+
+
+def greedy_generate(model: Model, params, prompt_tokens, num_new: int,
+                    max_len: Optional[int] = None, impl: str = "xla"):
+    """Reference end-to-end generation loop (prefill + decode steps)."""
+    B, S = prompt_tokens.shape
+    max_len = max_len or (S + num_new)
+    prefill = make_prefill_step(model, max_len=max_len, impl=impl)
+    decode = make_decode_step(model, impl=impl)
+    batch = {"tokens": prompt_tokens}
+    if model.cfg.is_encoder_decoder:
+        raise NotImplementedError("use decode from init_cache for enc-dec")
+    last, cache = prefill(params, batch)
+    toks = [jnp.argmax(last, -1)[:, None]]
+    for _ in range(num_new - 1):
+        last, cache = decode(params, cache, toks[-1])
+        toks.append(jnp.argmax(last, -1)[:, None])
+    return jnp.concatenate(toks, axis=1)

@@ -1,0 +1,74 @@
+"""Pytree helpers used across the FL stack and the training substrate."""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_count(tree) -> int:
+    """Total number of parameters."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree.leaves(tree))
+
+
+def tree_flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_to_numpy(tree):
+    return jax.tree.map(lambda x: np.asarray(x), tree)
+
+
+def tree_from_numpy(tree, like=None):
+    if like is None:
+        return jax.tree.map(jnp.asarray, tree)
+    return jax.tree.map(lambda x, ref: jnp.asarray(x, dtype=ref.dtype), tree, like)
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_weighted_mean(trees: List[Any], weights: List[float]):
+    """Weighted average of a list of pytrees — the heart of FedAvg."""
+    total = float(sum(weights))
+    if total <= 0:
+        raise ValueError("weights must sum to a positive value")
+    ws = [w / total for w in weights]
+    out = tree_scale(trees[0], ws[0])
+    for t, w in zip(trees[1:], ws[1:]):
+        out = tree_add(out, tree_scale(t, w))
+    return out
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    if len(la) != len(lb):
+        return False
+    return all(np.allclose(np.asarray(x), np.asarray(y), rtol=rtol, atol=atol)
+               for x, y in zip(la, lb))

@@ -1,0 +1,115 @@
+"""Client mods: DP clipping/noise, SecAgg exactness, Top-K compression."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import run_native
+from repro.fl import (DPMod, FedAvg, SecAggFedAvg, SecAggMod, ServerApp,
+                      ServerConfig, TopKCompressionMod)
+from repro.fl.messages import (FitIns, TaskIns, decode_fit_res,
+                               encode_fit_ins, encode_task_ins,
+                               decode_task_ins)
+from repro.fl.client import ClientApp, NumPyClient
+from repro.fl.quickstart import make_client_app
+
+SITES = ["site-1", "site-2", "site-3"]
+
+
+class _StepClient(NumPyClient):
+    """fit() moves params by a fixed delta — makes mod effects exact."""
+
+    def __init__(self, delta):
+        self.delta = np.asarray(delta, np.float64)
+
+    def fit(self, parameters, config):
+        return ([np.asarray(p, np.float64) + self.delta
+                 for p in parameters], 10, {})
+
+    def evaluate(self, parameters, config):
+        return 0.0, 1, {}
+
+
+def _run_fit_through(mods, delta, params):
+    app = ClientApp(lambda cid: _StepClient(delta).to_client(), mods=mods)
+    ins = FitIns([np.asarray(params, np.float64)], {})
+    t = TaskIns("fit", 1, encode_fit_ins(ins), task_id="t")
+    res_b = app.handle(encode_task_ins(t))
+    from repro.fl.messages import decode_task_res
+
+    return decode_fit_res(decode_task_res(res_b).payload)
+
+
+def test_dp_clips_update_norm():
+    mod = DPMod(clip_norm=0.5, noise_multiplier=0.0)
+    res = _run_fit_through([mod], delta=[3.0, 4.0], params=[[0.0, 0.0]])
+    # delta norm 5 -> clipped to 0.5
+    norm = np.linalg.norm(res.parameters[0])
+    assert abs(norm - 0.5) < 1e-9
+    assert res.metrics["dp_clip_scale"] == pytest.approx(0.1)
+
+
+def test_dp_noise_deterministic_per_site_round():
+    m1 = DPMod(clip_norm=1.0, noise_multiplier=0.5, site_id=1, seed=9)
+    m2 = DPMod(clip_norm=1.0, noise_multiplier=0.5, site_id=1, seed=9)
+    r1 = _run_fit_through([m1], [0.1, 0.1], [[0.0, 0.0]])
+    r2 = _run_fit_through([m2], [0.1, 0.1], [[0.0, 0.0]])
+    np.testing.assert_array_equal(r1.parameters[0], r2.parameters[0])
+    m3 = DPMod(clip_norm=1.0, noise_multiplier=0.5, site_id=2, seed=9)
+    r3 = _run_fit_through([m3], [0.1, 0.1], [[0.0, 0.0]])
+    assert not np.array_equal(r1.parameters[0], r3.parameters[0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-10, 10), min_size=2, max_size=6),
+       st.floats(0.1, 5.0))
+def test_dp_clip_property(delta, clip):
+    """Post-mod update norm <= clip bound (+eps), for any delta."""
+    mod = DPMod(clip_norm=clip, noise_multiplier=0.0)
+    res = _run_fit_through([mod], delta, [[0.0] * len(delta)])
+    assert np.linalg.norm(res.parameters[0]) <= clip + 1e-6
+
+
+def test_secagg_equals_plain_fedavg():
+    def seed_fn(a, b):
+        lo, hi = sorted([a, b])
+        import zlib
+        return zlib.crc32(f"{lo}|{hi}".encode())
+
+    plain = run_native(ServerApp(ServerConfig(num_rounds=2), FedAvg()),
+                       lambda s: make_client_app(s), SITES)
+    sec = run_native(
+        ServerApp(ServerConfig(num_rounds=2), SecAggFedAvg()),
+        lambda s: make_client_app(s, mods=[SecAggMod(
+            site=s, peers=SITES, pairwise_seed_fn=seed_fn)]), SITES)
+    for a, b in zip(plain.final_parameters, sec.final_parameters):
+        assert np.abs(a.astype(np.float64) - b.astype(np.float64)).max() < 1e-3
+
+
+def test_secagg_masked_share_looks_random():
+    """An individual masked share must not reveal the raw update."""
+    def seed_fn(a, b):
+        return 12345
+
+    mod = SecAggMod(site="site-1", peers=["site-1", "site-2"],
+                    pairwise_seed_fn=seed_fn)
+    res = _run_fit_through([mod], [0.25, -0.5], [[0.0, 0.0]])
+    share = res.parameters[0]
+    # quantized plaintext would be tiny ints; masked is full-range uint64
+    assert share.dtype == np.uint64
+    assert (share > np.uint64(1) << np.uint64(40)).any()
+
+
+def test_topk_keeps_fraction():
+    mod = TopKCompressionMod(fraction=0.25)
+    res = _run_fit_through([mod], [1.0, 0.001, 0.002, 0.003], [[0.0] * 4])
+    changed = np.nonzero(res.parameters[0])[0]
+    assert len(changed) == 1 and changed[0] == 0
+    assert res.metrics["topk_kept_frac"] == pytest.approx(0.25)
+
+
+def test_mods_compose_in_order():
+    """TopK after DP: final update is sparse AND clipped."""
+    mods = [DPMod(clip_norm=0.5, noise_multiplier=0.0),
+            TopKCompressionMod(fraction=0.5)]
+    res = _run_fit_through(mods, [3.0, 4.0], [[0.0, 0.0]])
+    assert np.linalg.norm(res.parameters[0]) <= 0.5 + 1e-9

@@ -1,0 +1,192 @@
+"""Substrate tests: optimizers, schedules, sharding rules, data, checkpoint."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.config import TrainConfig
+from repro.optim import (adamw, clip_by_global_norm, linear_warmup_cosine,
+                         make_optimizer, sgd)
+from repro.sharding import DEFAULT_RULES, spec_for
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+def test_adamw_matches_reference_math():
+    lr = 0.1
+    opt = adamw(lambda s: jnp.float32(lr), b1=0.9, b2=0.99, eps=1e-8,
+                weight_decay=0.0)
+    params = {"w": jnp.ones((3,), jnp.float32)}
+    grads = {"w": jnp.full((3,), 0.5, jnp.float32)}
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, jnp.int32(0))
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    want = -lr * (m / (1 - 0.9)) / (np.sqrt(v / (1 - 0.99)) + 1e-8)
+    np.testing.assert_allclose(np.asarray(updates["w"]), want, rtol=1e-5)
+
+
+def test_weight_decay_applied():
+    opt = adamw(lambda s: jnp.float32(0.1), weight_decay=0.1)
+    params = {"w": jnp.full((2,), 10.0)}
+    grads = {"w": jnp.zeros((2,))}
+    state = opt.init(params)
+    updates, _ = opt.update(grads, state, params, jnp.int32(0))
+    assert (np.asarray(updates["w"]) < 0).all()   # decay pulls toward zero
+
+
+def test_clip_by_global_norm():
+    grads = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(grads, 1.0)
+    assert norm == pytest.approx(10.0)
+    total = np.sqrt(sum(float(jnp.sum(x ** 2)) for x in jax.tree.leaves(clipped)))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedule_warmup_then_decay():
+    sched = linear_warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(sched(jnp.int32(0))) < float(sched(jnp.int32(9)))
+    assert float(sched(jnp.int32(9))) == pytest.approx(1.0, rel=1e-6)
+    assert float(sched(jnp.int32(80))) < 1.0
+
+
+@pytest.mark.parametrize("name", ["sgd", "momentum", "adam", "adamw",
+                                  "adafactor"])
+def test_all_optimizers_step(name):
+    cfg = TrainConfig(optimizer=name, learning_rate=1e-2)
+    opt = make_optimizer(cfg)
+    params = {"w": jnp.ones((4, 8)), "b": jnp.zeros((8,))}
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.1, params)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params, jnp.int32(0))
+    assert all(jnp.isfinite(u).all() for u in jax.tree.leaves(updates))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return jax.sharding.Mesh(devs.reshape(shape), axes)
+
+
+def test_spec_divisible_dims_shard():
+    mesh = _mesh()
+    spec = spec_for(("embed", "mlp"), (8, 16), mesh)
+    assert spec == P("data", "model")
+
+
+def test_spec_indivisible_falls_back():
+    mesh = _mesh()
+    spec = spec_for(("embed", "heads"), (8, 7), mesh)     # 7 % 4 != 0
+    assert spec[1] is None
+
+
+def test_two_pass_gives_model_to_tensor_dim():
+    mesh = _mesh()
+    # (embed, mlp): mlp (single-axis rule) must claim "model", embed gets data
+    spec = spec_for(("embed", "mlp"), (16, 16), mesh)
+    assert spec == P("data", "model")
+    # expert weights: experts claims model first
+    spec = spec_for(("experts", "embed_expert", "mlp"), (8, 16, 16), mesh)
+    assert spec[0] == "model" and spec[1] == "data" and spec[2] is None
+
+
+def test_no_mesh_axis_used_twice():
+    mesh = _mesh()
+    spec = spec_for(("mlp", "vocab"), (16, 16), mesh)     # both want "model"
+    used = [s for s in spec if s is not None]
+    assert len(set(used)) == len(used)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_spec_property_divisibility(d0, d1):
+    """Whatever the dims, sharded dims are always divisible by their axes."""
+    mesh = _mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = spec_for(("embed", "mlp"), (d0, d1), mesh)
+    for dim, entry in zip((d0, d1), spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        prod = int(np.prod([sizes[a] for a in axes]))
+        assert dim % prod == 0
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+def test_synthetic_deterministic_and_site_dependent():
+    from repro.data.synthetic import SyntheticLMDataset
+
+    a1 = SyntheticLMDataset(1000, 32, 10, seed=1, site=0).sample(4)
+    a2 = SyntheticLMDataset(1000, 32, 10, seed=1, site=0).sample(4)
+    b = SyntheticLMDataset(1000, 32, 10, seed=1, site=1).sample(4)
+    np.testing.assert_array_equal(a1["tokens"], a2["tokens"])
+    assert not np.array_equal(a1["tokens"], b["tokens"])
+    assert np.array_equal(a1["tokens"][:, 1:], a1["labels"][:, :-1])
+
+
+def test_dirichlet_partition_covers_everything():
+    from repro.data.partition import dirichlet_partition
+
+    labels = np.repeat(np.arange(10), 100)
+    parts = dirichlet_partition(labels, 5, alpha=0.5, seed=0)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(labels)
+    assert len(np.unique(all_idx)) == len(labels)      # disjoint cover
+    assert all(len(p) > 0 for p in parts)
+
+
+def test_iid_partition_balanced():
+    from repro.data.partition import iid_partition
+
+    parts = iid_partition(100, 4, seed=0)
+    assert sorted(len(p) for p in parts) == [25, 25, 25, 25]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)}}
+    save_checkpoint(str(tmp_path), 5, tree)
+    save_checkpoint(str(tmp_path), 10, jax.tree.map(lambda x: x * 2, tree))
+    assert latest_step(str(tmp_path)) == 10
+    restored, step = restore_checkpoint(str(tmp_path), tree)
+    assert step == 10
+    np.testing.assert_allclose(np.asarray(restored["a"]),
+                               np.asarray(tree["a"]) * 2)
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_shape_mismatch_rejected(tmp_path):
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.ones((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), {"a": jnp.ones((3,))})
+
+
+# ---------------------------------------------------------------------------
+# messages codec
+# ---------------------------------------------------------------------------
+def test_array_codec_bitwise():
+    from repro.fl.messages import arrays_to_bytes, bytes_to_arrays
+
+    arrays = [np.random.default_rng(0).normal(size=(3, 4)).astype(np.float32),
+              np.arange(5, dtype=np.int64),
+              np.asarray(jnp.ones((2,), jnp.bfloat16))]
+    out = bytes_to_arrays(arrays_to_bytes(arrays))
+    for a, b in zip(arrays, out):
+        assert a.dtype == b.dtype
+        assert np.array_equal(a.view(np.uint8), b.view(np.uint8))

@@ -1,0 +1,177 @@
+"""End-to-end behaviour of the paper's system (Fig. 4/5/6 claims).
+
+The heart of the reproduction: the SAME Flower-style app runs natively and
+inside the FLARE runtime (clean + faulty transports) with bitwise-identical
+results, plus multi-job concurrency, provisioning/authz, and metric
+streaming through the runtime.
+"""
+import numpy as np
+import pytest
+
+from repro.core import run_in_flare, run_native
+from repro.fl import FedAvg, ServerApp, ServerConfig
+from repro.fl.client import ClientApp
+from repro.fl.quickstart import QuickstartClient, make_client_app
+from repro.runtime import FlareRuntime, JobSpec
+from repro.runtime.jobs import JobStatus
+from repro.runtime.transport import FaultSpec
+
+SITES = ["site-1", "site-2", "site-3"]
+
+
+def _server_app(rounds=2):
+    return ServerApp(config=ServerConfig(num_rounds=rounds, round_timeout=60),
+                     strategy=FedAvg())
+
+
+@pytest.fixture
+def runtime():
+    rt = FlareRuntime()
+    for s in SITES:
+        rt.provision_site(s)
+    yield rt
+    rt.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5: reproducibility — native == in-FLARE (bitwise)
+# ---------------------------------------------------------------------------
+def test_native_equals_flare_bitwise(runtime):
+    h_native = run_native(_server_app(), lambda s: make_client_app(s), SITES)
+    h_flare = run_in_flare(runtime, _server_app(),
+                           lambda s: make_client_app(s), SITES)
+    assert h_native.losses() == h_flare.losses()
+    for a, b in zip(h_native.final_parameters, h_flare.final_parameters):
+        assert np.array_equal(a, b)
+
+
+def test_native_equals_flare_under_faults():
+    h_native = run_native(_server_app(), lambda s: make_client_app(s), SITES)
+    rt = FlareRuntime(faults=FaultSpec(drop_prob=0.15, dup_prob=0.1,
+                                       max_delay_s=0.01, seed=42))
+    for s in SITES:
+        rt.provision_site(s)
+    try:
+        h_faulty = run_in_flare(rt, _server_app(),
+                                lambda s: make_client_app(s), SITES)
+        stats = rt.network.stats
+    finally:
+        rt.shutdown()
+    assert stats["dropped"] > 0, "fault injection did not fire"
+    assert h_native.losses() == h_faulty.losses()
+    for a, b in zip(h_native.final_parameters, h_faulty.final_parameters):
+        assert np.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: metric streaming (hybrid integration)
+# ---------------------------------------------------------------------------
+def test_metric_streaming_through_runtime(runtime):
+    def client_app_fn(site):
+        def with_ctx(ctx):
+            writer = ctx.summary_writer()
+            return ClientApp(client_fn=lambda cid: QuickstartClient(
+                site, writer=writer).to_client())
+        return with_ctx
+
+    run_in_flare(runtime, _server_app(), client_app_fn, SITES)
+    job_id = next(iter(runtime._jobs))
+    mc = runtime.metrics(job_id)
+    tags = mc.tags()
+    for s in SITES:
+        assert f"{s}/train_loss" in tags
+        assert f"{s}/test_accuracy" in tags
+    series = mc.series("site-1/train_loss")
+    assert len(series) == 2                      # one point per round
+    assert mc.export_tensorboard_json().startswith("{")
+
+
+# ---------------------------------------------------------------------------
+# §3.1 multi-job: concurrent jobs share clients/server without conflicts
+# ---------------------------------------------------------------------------
+def test_concurrent_jobs(runtime):
+    admin = runtime.provisioner.issue("admin", "admin")
+
+    class SJob:
+        def __init__(self, tag):
+            self.tag = tag
+
+        def run(self, ctx):
+            acc = []
+            for site in sorted(ctx.sites):
+                acc.append(ctx.request(site, "mul", self.tag.encode()).decode())
+            return acc
+
+    class CJob:
+        def __init__(self, site):
+            self.site = site
+
+        def run(self, ctx):
+            ctx.register_handler(
+                "mul", lambda m: f"{self.site}:{m.payload.decode()}".encode())
+            ctx.stop_event.wait()
+
+    ids = []
+    for tag in ("alpha", "beta", "gamma"):
+        spec = JobSpec(name=tag, server_app_fn=lambda t=tag: SJob(t),
+                       client_app_fn=lambda s: CJob(s), min_sites=3,
+                       resources={"gpu": 0.25})
+        ids.append(runtime.submit_job(spec, admin))
+    recs = [runtime.wait(j, timeout=60) for j in ids]
+    for rec, tag in zip(recs, ("alpha", "beta", "gamma")):
+        assert rec.status == JobStatus.COMPLETED, rec.error
+        assert rec.result == [f"{s}:{tag}" for s in SITES]
+
+
+def test_job_queues_when_resources_exhausted(runtime):
+    admin = runtime.provisioner.issue("admin", "admin")
+
+    class SJob:
+        def run(self, ctx):
+            import time
+            time.sleep(0.3)
+            return "ok"
+
+    class CJob:
+        def __init__(self, site):
+            pass
+
+        def run(self, ctx):
+            ctx.stop_event.wait()
+
+    specs = [JobSpec(name=f"j{i}", server_app_fn=lambda: SJob(),
+                     client_app_fn=lambda s: CJob(s), min_sites=3,
+                     resources={"gpu": 1.0}) for i in range(2)]
+    ids = [runtime.submit_job(sp, admin) for sp in specs]
+    recs = [runtime.wait(j, timeout=60) for j in ids]
+    assert all(r.status == JobStatus.COMPLETED for r in recs)
+
+
+# ---------------------------------------------------------------------------
+# provisioning / authorization
+# ---------------------------------------------------------------------------
+def test_unauthorized_submit_rejected(runtime):
+    client_kit = runtime.provisioner.issue("site-1", "client")
+    spec = JobSpec(name="x", server_app_fn=lambda: None,
+                   client_app_fn=lambda s: None)
+    with pytest.raises(PermissionError):
+        runtime.submit_job(spec, client_kit)
+
+
+def test_forged_kit_rejected(runtime):
+    from repro.runtime.provision import StartupKit
+
+    forged = StartupKit(runtime.provisioner.project, "admin", "admin",
+                        b"\x00" * 32)
+    spec = JobSpec(name="x", server_app_fn=lambda: None,
+                   client_app_fn=lambda s: None)
+    with pytest.raises(PermissionError):
+        runtime.submit_job(spec, forged)
+
+
+def test_pairwise_seeds_symmetric(runtime):
+    p = runtime.provisioner
+    assert p.pairwise_seed("site-1", "site-2") == p.pairwise_seed("site-2",
+                                                                  "site-1")
+    assert p.pairwise_seed("site-1", "site-2") != p.pairwise_seed("site-1",
+                                                                  "site-3")
