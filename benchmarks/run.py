@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
   strategies_convergence FedAvg/FedAdam/FedProx final loss (ecosystem claim)
   secagg_overhead        SecAgg vs plain round; derived = max param delta
   kernel_*               Pallas kernels (interpret mode) vs jnp oracle
+  agg_throughput_*       flat-buffer aggregation engine: decode+FedAvg MB/s
+                         across model sizes x client counts, vs the legacy
+                         per-layer path (derived = speedup + equivalence)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -223,6 +226,73 @@ def bench_kernels(quick=False):
     print(f"kernel_rglru_scan,{us:.0f},interpret_mode;steps=256")
 
 
+def _agg_case(label, n_params, n_clients, with_legacy, low_memory=False):
+    """Time the server aggregation hot path — TaskRes payload bytes ->
+    new global model — for the flat engine and (optionally) the legacy
+    per-layer path on identical inputs."""
+    import gc
+
+    from repro.fl.legacy import LegacyFedAvg
+    from repro.fl.messages import FitRes, decode_fit_res, encode_fit_res
+    from repro.fl.strategy import make_strategy
+
+    leaf = 250_000                       # ~transformer-block-sized leaves
+    nleaves = max(1, n_params // leaf)
+    rng = np.random.default_rng(42)
+    arrays = [rng.random(leaf, np.float32) for _ in range(nleaves)]
+    current = [np.zeros(leaf, np.float32) for _ in range(nleaves)]
+    nbytes = sum(a.nbytes for a in arrays)
+    # all clients reuse one payload: aggregation cost is identical and the
+    # bench fits in memory at 500M params x 64 clients
+    payload_flat = encode_fit_res(FitRes(arrays, 0, {}), codec="flat")
+    payload_legacy = encode_fit_res(FitRes(arrays, 0, {}), codec="legacy") \
+        if with_legacy else None
+    del arrays
+    gc.collect()
+    weights = [10 + i for i in range(n_clients)]
+
+    strat = make_strategy("fedavg", low_memory=low_memory)
+    t0 = time.perf_counter()
+    acc = strat.fit_accumulator(1, current)
+    for c in range(n_clients):
+        r = decode_fit_res(payload_flat)
+        r.num_examples = weights[c]
+        acc.add(f"site-{c}", r)
+    flat_out, _ = acc.finalize([])
+    t_flat = time.perf_counter() - t0
+
+    derived = f"mbps={nbytes * n_clients / t_flat / 1e6:.0f}"
+    if with_legacy:
+        t0 = time.perf_counter()
+        results = []
+        for c in range(n_clients):
+            r = decode_fit_res(payload_legacy)
+            r.num_examples = weights[c]
+            results.append((f"site-{c}", r))
+        legacy_out, _ = LegacyFedAvg().aggregate_fit(1, results, [], current)
+        t_leg = time.perf_counter() - t0
+        match = all(np.array_equal(a, b)
+                    for a, b in zip(flat_out, legacy_out))
+        derived += f";speedup_vs_legacy={t_leg / t_flat:.2f}x;match={match}"
+    print(f"agg_throughput_{label}_{n_clients}clients,{t_flat * 1e6:.0f},"
+          f"{derived}")
+
+
+def bench_agg_throughput(quick=False):
+    cases = [("1M", 1_000_000, 4, True), ("1M", 1_000_000, 16, True),
+             ("50M", 50_000_000, 16, True)]
+    if not quick:
+        cases += [("1M", 1_000_000, 64, True), ("50M", 50_000_000, 4, True),
+                  ("50M", 50_000_000, 64, False),
+                  ("500M", 500_000_000, 4, False)]
+    for label, n_params, n_clients, with_legacy in cases:
+        try:
+            _agg_case(label, n_params, n_clients, with_legacy,
+                      low_memory=n_params >= 500_000_000)
+        except MemoryError:
+            print(f"agg_throughput_{label}_{n_clients}clients,0,skipped=oom")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -235,6 +305,7 @@ def main() -> None:
     bench_strategies(args.quick)
     bench_secagg(args.quick)
     bench_kernels(args.quick)
+    bench_agg_throughput(args.quick)
     if not ok:
         print("ERROR: fig5 reproducibility failed", file=sys.stderr)
         sys.exit(1)

@@ -1,12 +1,16 @@
 from repro.fl.messages import (  # noqa: F401
     FitIns, FitRes, EvaluateIns, EvaluateRes, TaskIns, TaskRes,
     arrays_to_bytes, bytes_to_arrays, params_to_arrays, arrays_to_params,
+    set_default_codec,
+)
+from repro.fl.flat import (  # noqa: F401
+    FlatParams, Layout, layout_for, layout_of, unflatten_vector,
 )
 from repro.fl.client import Client, ClientApp, NumPyClient  # noqa: F401
 from repro.fl.server import ServerApp, ServerConfig, Driver  # noqa: F401
 from repro.fl.strategy import (  # noqa: F401
-    Strategy, FedAvg, FedAdam, FedYogi, FedAvgM, FedProx, FedMedian,
-    FedTrimmedMean, Krum, make_strategy,
+    Strategy, FitAccumulator, FedAvg, FedAdam, FedYogi, FedAvgM, FedProx,
+    FedMedian, FedTrimmedMean, Krum, make_strategy, weighted_average,
 )
 from repro.fl.mods import (  # noqa: F401
     DPMod, SecAggMod, SecAggFedAvg, TopKCompressionMod,

@@ -1,0 +1,220 @@
+"""Vectorized aggregation kernels over flat parameter buffers.
+
+Every strategy's per-layer Python loop reduces to one of four kernels over
+the (clients x total_params) logical matrix, all cache-blocked on a
+``CHUNK``-element window so the float64 accumulator and scratch stay
+resident in L2 while the loop streams each client's fp32 view exactly once:
+
+- :func:`weighted_mean` — FedAvg's sum((w_i/W) * x_i).  The per-client
+  weight is folded to ``np.float64(w_i / W)`` up front, which both removes
+  the final rescale pass and (because the ops and their order match the
+  legacy per-layer loop elementwise) keeps the result **bitwise identical**
+  to the legacy implementation.
+- :class:`StreamingWeightedSum` — the same reduction, but folding each
+  client in as it arrives and releasing the payload; peak memory is one
+  float64 accumulator instead of every client's update. sum(w_i x_i)/W
+  differs from the fold by <=1 ULP of the fp64 accumulator (invisible
+  after the fp32 cast).
+- :func:`median` / :func:`trimmed_mean` — coordinate-wise robust
+  aggregation on a chunk-stacked (n, CHUNK) float64 tile (peak extra
+  memory O(n * CHUNK), not O(n * total)).
+- :func:`krum_distances` — all pairwise squared L2 distances via a
+  chunk-accumulated Gram matrix: ||a-b||^2 = ||a||^2 + ||b||^2 - 2<a,b>,
+  one dgemm per chunk instead of the O(n^2) Python loop over full vectors.
+
+NB (numpy>=2 / NEP 50): scalar weights MUST be ``np.float64`` — a bare
+python float is "weak" and would demote the multiply to the fp32 loop,
+silently breaking the exactness guarantee.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.fl.flat import FlatParams, Layout, np_dtype
+
+# 16K elements: chunk fp64 accumulator + scratch = 256 KiB, L2-resident.
+CHUNK = 1 << 14
+
+_FLOATS = {"float16", "float32", "float64"}
+
+
+def _f64_chunk(fp: FlatParams, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+    """Elements [lo, hi) of ``fp`` as float64, written into ``out``."""
+    layout = fp.layout
+    o = out[:hi - lo]
+    if layout.uniform_dtype is not None:
+        np.copyto(o, fp.math_view()[lo:hi], casting="unsafe")
+        return o
+    for i, spec in enumerate(layout.leaves):      # mixed dtypes: per-segment
+        s, e = spec.eoffset, spec.eoffset + spec.size
+        if e <= lo or s >= hi:
+            continue
+        a, b = max(s, lo), min(e, hi)
+        np.copyto(o[a - lo:b - lo], fp.leaf(i).reshape(-1)[a - s:b - s],
+                  casting="unsafe")
+    return o
+
+
+def weighted_mean(pairs: Sequence[Tuple[FlatParams, float]],
+                  layout: Layout) -> FlatParams:
+    """sum((w_i / W) x_i) over flat buffers -> FlatParams of ``layout``.
+
+    Chunk-outer / client-inner: the fp64 accumulator chunk is reused across
+    clients and cast straight into the output buffer, so no total-size fp64
+    array is ever materialized.
+    """
+    total_w = float(sum(w for _, w in pairs))
+    scaled = [np.float64(w / total_w) for _, w in pairs]
+    out = FlatParams.zeros(layout)
+    n = layout.total_size
+    if n == 0 or not pairs:
+        return out
+    uniform = layout.uniform_dtype in _FLOATS
+    ovec = out.math_view() if uniform else np.empty(n, np.float64)
+    acc = np.empty(CHUNK, np.float64)
+    scratch = np.empty(CHUNK, np.float64)
+    tmp = np.empty(CHUNK, np.float64)
+    for lo in range(0, n, CHUNK):
+        hi = min(lo + CHUNK, n)
+        a = acc[:hi - lo]
+        x0 = _f64_chunk(pairs[0][0], lo, hi, tmp)
+        np.multiply(x0, scaled[0], out=a)
+        for (fp, _), sw in zip(pairs[1:], scaled[1:]):
+            x = _f64_chunk(fp, lo, hi, tmp)
+            np.multiply(x, sw, out=scratch[:hi - lo])
+            a += scratch[:hi - lo]
+        ovec[lo:hi] = a
+    if not uniform:
+        for i, spec in enumerate(layout.leaves):
+            out.leaf(i)[...] = ovec[spec.eoffset:spec.eoffset + spec.size] \
+                .reshape(spec.shape).astype(np_dtype(spec.dtype))
+    return out
+
+
+class StreamingWeightedSum:
+    """Incremental sum(w_i x_i); finalize() divides by W and casts."""
+
+    def __init__(self, layout: Layout):
+        self.layout = layout
+        self._acc = np.zeros(layout.total_size, np.float64)
+        self._scratch = np.empty(min(CHUNK, max(layout.total_size, 1)),
+                                 np.float64)
+        self._tmp = np.empty_like(self._scratch)
+        self.total_w = 0.0
+        self.count = 0
+
+    def add(self, fp: FlatParams, w: float) -> None:
+        sw = np.float64(w)
+        n = self.layout.total_size
+        for lo in range(0, n, CHUNK):
+            hi = min(lo + CHUNK, n)
+            x = _f64_chunk(fp, lo, hi, self._tmp)
+            np.multiply(x, sw, out=self._scratch[:hi - lo])
+            self._acc[lo:hi] += self._scratch[:hi - lo]
+        self.total_w += float(w)
+        self.count += 1
+
+    def finalize(self) -> FlatParams:
+        self._acc *= np.float64(1.0 / self.total_w)
+        out = FlatParams.zeros(self.layout)
+        for i, spec in enumerate(self.layout.leaves):
+            seg = self._acc[spec.eoffset:spec.eoffset + spec.size]
+            out.leaf(i)[...] = seg.reshape(spec.shape) \
+                .astype(np_dtype(spec.dtype))
+        return out
+
+
+def _rowstack(flats: Sequence[FlatParams], lo: int, hi: int,
+              m: np.ndarray) -> np.ndarray:
+    tile = m[:len(flats), :hi - lo]
+    for i, fp in enumerate(flats):
+        _f64_chunk(fp, lo, hi, tile[i])
+    return tile
+
+
+def median(flats: Sequence[FlatParams], layout: Layout) -> FlatParams:
+    """Coordinate-wise median, chunk-stacked."""
+    return _coordinatewise(flats, layout,
+                           lambda t: np.median(t, axis=0, overwrite_input=True))
+
+
+def trimmed_mean(flats: Sequence[FlatParams], layout: Layout,
+                 k: int) -> FlatParams:
+    """Mean after trimming the k smallest/largest values per coordinate."""
+    n = len(flats)
+
+    def reduce(tile: np.ndarray) -> np.ndarray:
+        tile.sort(axis=0)
+        sl = tile[k:n - k] if n > 2 * k else tile
+        return np.mean(sl, axis=0)
+
+    return _coordinatewise(flats, layout, reduce)
+
+
+def _coordinatewise(flats, layout, reduce_fn) -> FlatParams:
+    out = FlatParams.zeros(layout)
+    n = layout.total_size
+    if n == 0 or not flats:
+        return out
+    uniform = layout.uniform_dtype in _FLOATS
+    ovec = out.math_view() if uniform else np.empty(n, np.float64)
+    m = np.empty((len(flats), CHUNK), np.float64)
+    for lo in range(0, n, CHUNK):
+        hi = min(lo + CHUNK, n)
+        ovec[lo:hi] = reduce_fn(_rowstack(flats, lo, hi, m))
+    if not uniform:
+        for i, spec in enumerate(layout.leaves):
+            out.leaf(i)[...] = ovec[spec.eoffset:spec.eoffset + spec.size] \
+                .reshape(spec.shape).astype(np_dtype(spec.dtype))
+    return out
+
+
+def krum_distances(flats: Sequence[FlatParams], layout: Layout) -> np.ndarray:
+    """(n, n) matrix of pairwise squared L2 distances.
+
+    Accumulates the Gram matrix G += X_c X_c^T one (n, CHUNK) fp64 tile at
+    a time, then expands ||a-b||^2 = ||a||^2 + ||b||^2 - 2<a,b>.  Each tile
+    is centered on its first row before the dgemm — pairwise distances are
+    translation-invariant, and removing the large common component (late
+    rounds: client updates nearly identical, norms huge) keeps the
+    expansion from cancelling catastrophically.  Clamped at zero for the
+    residual rounding.
+    """
+    n_clients = len(flats)
+    G = np.zeros((n_clients, n_clients), np.float64)
+    m = np.empty((n_clients, CHUNK), np.float64)
+    ref = np.empty(CHUNK, np.float64)
+    total = layout.total_size
+    for lo in range(0, total, CHUNK):
+        hi = min(lo + CHUNK, total)
+        tile = _rowstack(flats, lo, hi, m)
+        np.copyto(ref[:hi - lo], tile[0])
+        tile -= ref[:hi - lo]
+        G += tile @ tile.T
+    sq = np.diag(G).copy()
+    D = sq[:, None] + sq[None, :] - 2.0 * G
+    np.maximum(D, 0.0, out=D)
+    return D
+
+
+def krum_scores(D: np.ndarray, num_byzantine: int) -> np.ndarray:
+    """Multi-Krum scores: per client, the sum of its n-f-2 smallest
+    distances to other clients (Blanchard et al. 2017)."""
+    n = D.shape[0]
+    f = min(num_byzantine, max(0, (n - 3) // 2))
+    D = D.copy()
+    np.fill_diagonal(D, np.inf)
+    D.sort(axis=1)
+    m = max(n - f - 2, 1)
+    return D[:, :m].sum(axis=1)
+
+
+def wrapping_sum_u64(flats: Sequence[FlatParams],
+                     layout: Layout) -> np.ndarray:
+    """Mod-2^64 sum of uint64 flat buffers (SecAgg mask cancellation)."""
+    acc = np.zeros(layout.total_size, np.uint64)
+    for fp in flats:
+        acc += fp.math_view()
+    return acc

@@ -1,0 +1,177 @@
+"""Flat-buffer parameter representation — the aggregation hot path.
+
+A model's parameters cross every FL hop as ``List[np.ndarray]``; treating
+them leaf-by-leaf makes each round O(clients x layers) in Python overhead
+and copies the payload several times per hop.  :class:`FlatParams` instead
+carries **one contiguous byte buffer** plus a :class:`Layout` (dtypes,
+shapes, offsets).  Properties:
+
+- pytree/NDArrays <-> flat conversion is a single ``concatenate`` (or free,
+  when the arrays already view one buffer, e.g. straight off the wire);
+- per-leaf access is a zero-copy ``view``/``reshape`` into the buffer;
+- layouts are interned in a cache, so repeated rounds of the same model
+  reuse one Layout object and comparisons are pointer comparisons;
+- the math view (one fp64/native vector over all leaves) is what the
+  vectorized strategy kernels in :mod:`repro.fl.agg_kernels` consume.
+
+The byte buffer preserves leaves bitwise, so the Fig. 5 exactness guarantee
+(native vs in-FLARE bit-identical) survives the representation change.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+NDArrays = List[np.ndarray]
+
+
+def np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype name, including ml_dtypes extensions (bf16/fp8)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # jax dependency; provides bfloat16 et al.
+
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    dtype: str                  # dtype name ("float32", "bfloat16", ...)
+    shape: Tuple[int, ...]
+    offset: int                 # byte offset into the flat buffer
+    nbytes: int
+    eoffset: int                # element offset into the math vector
+    size: int                   # number of elements
+
+
+@dataclass(frozen=True)
+class Layout:
+    leaves: Tuple[LeafSpec, ...]
+    total_bytes: int
+    total_size: int             # total element count
+    uniform_dtype: Optional[str]  # set when every leaf shares one dtype
+
+    @property
+    def signature(self) -> Tuple[Tuple[str, Tuple[int, ...]], ...]:
+        return tuple((l.dtype, l.shape) for l in self.leaves)
+
+
+_LAYOUT_CACHE: Dict[Tuple[Tuple[str, Tuple[int, ...]], ...], Layout] = {}
+
+
+def layout_for(signature: Sequence[Tuple[str, Tuple[int, ...]]]) -> Layout:
+    """Intern a Layout for a (dtype, shape) signature."""
+    key = tuple((str(d), tuple(int(x) for x in s)) for d, s in signature)
+    cached = _LAYOUT_CACHE.get(key)
+    if cached is not None:
+        return cached
+    leaves = []
+    off = eoff = 0
+    for dname, shape in key:
+        dt = np_dtype(dname)
+        size = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nbytes = size * dt.itemsize
+        leaves.append(LeafSpec(dname, shape, off, nbytes, eoff, size))
+        off += nbytes
+        eoff += size
+    dtypes = {l.dtype for l in leaves}
+    layout = Layout(tuple(leaves), off, eoff,
+                    dtypes.pop() if len(dtypes) == 1 else None)
+    _LAYOUT_CACHE[key] = layout
+    return layout
+
+
+def layout_of(arrays: NDArrays) -> Layout:
+    return layout_for([(a.dtype.name, a.shape) for a in arrays])
+
+
+class FlatParams:
+    """One contiguous uint8 buffer + a Layout describing the leaves."""
+
+    __slots__ = ("buf", "layout")
+
+    def __init__(self, buf: np.ndarray, layout: Layout):
+        assert buf.dtype == np.uint8 and buf.ndim == 1
+        assert buf.nbytes == layout.total_bytes, (buf.nbytes, layout)
+        self.buf = buf
+        self.layout = layout
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def from_arrays(cls, arrays: NDArrays,
+                    layout: Optional[Layout] = None) -> "FlatParams":
+        """Pack leaves into one contiguous buffer (a single copy).
+
+        Messages decoded from the flat wire format never come through here —
+        their FlatParams wraps the received payload zero-copy (see
+        ``messages.decode_fit_res``); this is the entry point for freshly
+        produced client/strategy arrays.
+        """
+        layout = layout or layout_of(arrays)
+        buf = np.empty(layout.total_bytes, np.uint8)
+        for spec, a in zip(layout.leaves, arrays):
+            seg = buf[spec.offset:spec.offset + spec.nbytes]
+            seg.view(np_dtype(spec.dtype))[...] = \
+                np.ascontiguousarray(a).reshape(-1)
+        return cls(buf, layout)
+
+    @classmethod
+    def from_buffer(cls, data, layout: Layout, offset: int = 0
+                    ) -> "FlatParams":
+        """Zero-copy wrap of ``data`` (bytes/memoryview/ndarray)."""
+        buf = np.frombuffer(data, np.uint8, count=layout.total_bytes,
+                            offset=offset)
+        return cls(buf, layout)
+
+    @classmethod
+    def zeros(cls, layout: Layout) -> "FlatParams":
+        return cls(np.zeros(layout.total_bytes, np.uint8), layout)
+
+    # ------------------------------------------------------------- views
+    def leaf(self, i: int) -> np.ndarray:
+        spec = self.layout.leaves[i]
+        seg = self.buf[spec.offset:spec.offset + spec.nbytes]
+        return seg.view(np_dtype(spec.dtype)).reshape(spec.shape)
+
+    def to_arrays(self) -> NDArrays:
+        """Zero-copy per-leaf views (read-only iff the buffer is)."""
+        return [self.leaf(i) for i in range(len(self.layout.leaves))]
+
+    def math_view(self) -> np.ndarray:
+        """The whole buffer as one 1-D vector of the uniform dtype.
+
+        Zero-copy; only valid for uniform-dtype layouts (the common case —
+        fp32 models, or uint64 SecAgg shares).
+        """
+        u = self.layout.uniform_dtype
+        if u is None:
+            raise ValueError("math_view() needs a uniform-dtype layout")
+        return self.buf.view(np_dtype(u))
+
+    def to_f64(self, out: Optional[np.ndarray] = None) -> np.ndarray:
+        """All leaves as one float64 vector (one pass; ``out`` reusable)."""
+        lo = self.layout
+        if out is None:
+            out = np.empty(lo.total_size, np.float64)
+        if lo.uniform_dtype is not None:
+            np.copyto(out, self.math_view(), casting="unsafe")
+        else:
+            for i, spec in enumerate(lo.leaves):
+                np.copyto(out[spec.eoffset:spec.eoffset + spec.size],
+                          self.leaf(i).reshape(-1), casting="unsafe")
+        return out
+
+    def nbytes(self) -> int:
+        return self.layout.total_bytes
+
+
+def unflatten_vector(vec: np.ndarray, layout: Layout) -> NDArrays:
+    """Split a math vector back into leaves, cast to each leaf's dtype."""
+    out = []
+    for spec in layout.leaves:
+        seg = vec[spec.eoffset:spec.eoffset + spec.size]
+        out.append(seg.reshape(spec.shape).astype(np_dtype(spec.dtype)))
+    return out

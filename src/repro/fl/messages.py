@@ -1,12 +1,27 @@
 """Wire format for the Flower-analogue app layer.
 
-Everything that crosses a process/transport boundary is **bytes** encoded
-with msgpack: numpy arrays travel as (dtype, shape, raw-buffer) triples, so
-the encoding is exact (bitwise) — a prerequisite for the paper's Fig. 5
+Everything that crosses a process/transport boundary is **bytes**.  Two
+codecs coexist behind a leading version byte:
+
+- **flat** (default, magic ``0xF1``): one msgpack header (layout
+  signature + config/metrics) followed by a single 64-byte-aligned
+  contiguous binary payload holding every leaf back to back.  Decoding is
+  **zero-copy** — leaves are ``np.frombuffer`` views into the received
+  bytes, and the whole-model :class:`~repro.fl.flat.FlatParams` rides on
+  the decoded message (``.flat``) so the aggregation kernels never touch
+  per-layer Python loops.
+- **legacy** (any other first byte — legacy messages start with a msgpack
+  fixmap/fixarray marker): per-array ``(dtype, shape, raw-buffer)``
+  msgpack triples, exactly the seed format, kept for on-the-wire
+  compatibility with older peers.
+
+Both encodings carry raw little-endian buffers, so either way the
+encoding is exact (bitwise) — a prerequisite for the paper's Fig. 5
 reproducibility claim (native vs. in-FLARE must match exactly).
 """
 from __future__ import annotations
 
+import struct
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -15,19 +30,34 @@ import numpy as np
 
 import jax
 
+from repro.fl.flat import FlatParams, Layout, layout_for, layout_of, np_dtype
+
 NDArrays = List[np.ndarray]
 
+FLAT_MAGIC = 0xF1
+_HEADER_ALIGN = 64       # payload starts 64-byte aligned for fast views
+
+_DEFAULT_CODEC = "flat"
+
+
+def set_default_codec(name: str) -> str:
+    """Switch the process-wide encode codec ("flat" | "legacy").
+
+    Decoding always auto-detects, so mixed fleets interoperate; this only
+    controls what *we* put on the wire. Returns the previous codec.
+    """
+    global _DEFAULT_CODEC
+    if name not in ("flat", "legacy"):
+        raise ValueError(f"unknown codec {name!r}")
+    prev, _DEFAULT_CODEC = _DEFAULT_CODEC, name
+    return prev
+
 
 # ---------------------------------------------------------------------------
-# array codec
+# legacy per-array codec
 # ---------------------------------------------------------------------------
 def _np_dtype(name: str) -> np.dtype:
-    try:
-        return np.dtype(name)
-    except TypeError:
-        import ml_dtypes  # bf16/fp8 extension dtypes (jax dependency)
-
-        return np.dtype(getattr(ml_dtypes, name))
+    return np_dtype(name)
 
 
 def _pack_array(a: np.ndarray) -> Dict[str, Any]:
@@ -41,11 +71,67 @@ def _unpack_array(d: Dict[str, Any]) -> np.ndarray:
         .reshape(d["shape"]).copy()
 
 
-def arrays_to_bytes(arrays: NDArrays) -> bytes:
+# ---------------------------------------------------------------------------
+# flat codec framing
+# ---------------------------------------------------------------------------
+def _flat_frame(head: Dict[str, Any], fp: FlatParams) -> bytes:
+    """[0xF1][u32 header_len][msgpack header][pad to 64][payload]"""
+    h = msgpack.packb(head, use_bin_type=True)
+    data_off = _aligned(5 + len(h))
+    prefix = bytes([FLAT_MAGIC]) + struct.pack("<I", len(h)) + h \
+        + b"\x00" * (data_off - 5 - len(h))
+    # single copy of the model payload into the message
+    return b"".join((prefix, memoryview(fp.buf)))
+
+
+def _aligned(n: int) -> int:
+    return -(-n // _HEADER_ALIGN) * _HEADER_ALIGN
+
+
+def _is_flat(b: bytes) -> bool:
+    return len(b) >= 5 and b[0] == FLAT_MAGIC
+
+
+def _flat_unframe(b: bytes, writable: bool = False
+                  ) -> Tuple[Dict[str, Any], Optional[FlatParams]]:
+    """``writable=False`` wraps the message bytes zero-copy (read-only
+    views — the server aggregation hot path only reads).  ``writable=True``
+    copies the payload once into a fresh buffer: client-facing decodes use
+    it so ``fit(parameters, ...)`` may mutate in place, like the legacy
+    per-array codec allowed."""
+    (hlen,) = struct.unpack_from("<I", b, 1)
+    head = msgpack.unpackb(memoryview(b)[5:5 + hlen], raw=False)
+    fp = None
+    if "l" in head:
+        layout = layout_for([(d, tuple(s)) for d, s in head["l"]])
+        fp = FlatParams.from_buffer(b, layout, offset=_aligned(5 + hlen))
+        if writable:
+            fp = FlatParams(fp.buf.copy(), layout)
+    return head, fp
+
+
+def _leaf_sig(fp: FlatParams) -> List[List[Any]]:
+    return [[l.dtype, list(l.shape)] for l in fp.layout.leaves]
+
+
+def _as_flat(parameters: NDArrays, flat: Optional[FlatParams]) -> FlatParams:
+    return flat if flat is not None else FlatParams.from_arrays(parameters)
+
+
+# ---------------------------------------------------------------------------
+# NDArrays <-> bytes (get_parameters / initial parameters path)
+# ---------------------------------------------------------------------------
+def arrays_to_bytes(arrays: NDArrays, codec: Optional[str] = None) -> bytes:
+    if (codec or _DEFAULT_CODEC) == "flat":
+        fp = FlatParams.from_arrays(arrays)
+        return _flat_frame({"l": _leaf_sig(fp)}, fp)
     return msgpack.packb([_pack_array(a) for a in arrays], use_bin_type=True)
 
 
 def bytes_to_arrays(b: bytes) -> NDArrays:
+    if _is_flat(b):
+        _, fp = _flat_unframe(b, writable=True)   # one-shot path, not hot
+        return fp.to_arrays()
     return [_unpack_array(d) for d in msgpack.unpackb(b, raw=False)]
 
 
@@ -70,6 +156,7 @@ def arrays_to_params(arrays: NDArrays, like):
 class FitIns:
     parameters: NDArrays
     config: Dict[str, Any] = field(default_factory=dict)
+    flat: Optional[FlatParams] = field(default=None, repr=False, compare=False)
 
 
 @dataclass
@@ -77,12 +164,20 @@ class FitRes:
     parameters: NDArrays
     num_examples: int
     metrics: Dict[str, Any] = field(default_factory=dict)
+    flat: Optional[FlatParams] = field(default=None, repr=False, compare=False)
+
+    def set_parameters(self, arrays: NDArrays,
+                       flat: Optional[FlatParams] = None) -> None:
+        """Replace parameters, keeping the cached flat view coherent."""
+        self.parameters = arrays
+        self.flat = flat
 
 
 @dataclass
 class EvaluateIns:
     parameters: NDArrays
     config: Dict[str, Any] = field(default_factory=dict)
+    flat: Optional[FlatParams] = field(default=None, repr=False, compare=False)
 
 
 @dataclass
@@ -115,38 +210,59 @@ def _enc_config(cfg: Dict[str, Any]) -> Dict[str, Any]:
     for k, v in cfg.items():
         if isinstance(v, (int, float, str, bool, bytes)):
             out[k] = v
+        elif isinstance(v, (np.floating, np.integer)):
+            out[k] = v.item()
         else:
             raise TypeError(f"config value {k}={type(v)} not wire-safe")
     return out
 
 
-def encode_fit_ins(x: FitIns) -> bytes:
+def encode_fit_ins(x: FitIns, codec: Optional[str] = None) -> bytes:
+    if (codec or _DEFAULT_CODEC) == "flat":
+        fp = _as_flat(x.parameters, x.flat)
+        return _flat_frame({"l": _leaf_sig(fp), "c": _enc_config(x.config)}, fp)
     return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
                           "c": _enc_config(x.config)}, use_bin_type=True)
 
 
 def decode_fit_ins(b: bytes) -> FitIns:
+    if _is_flat(b):
+        head, fp = _flat_unframe(b, writable=True)
+        return FitIns(fp.to_arrays(), head.get("c", {}), flat=fp)
     d = msgpack.unpackb(b, raw=False)
     return FitIns([_unpack_array(a) for a in d["p"]], d["c"])
 
 
-def encode_fit_res(x: FitRes) -> bytes:
+def encode_fit_res(x: FitRes, codec: Optional[str] = None) -> bytes:
+    if (codec or _DEFAULT_CODEC) == "flat":
+        fp = _as_flat(x.parameters, x.flat)
+        return _flat_frame({"l": _leaf_sig(fp), "n": x.num_examples,
+                            "m": _enc_config(x.metrics)}, fp)
     return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
                           "n": x.num_examples, "m": _enc_config(x.metrics)},
                          use_bin_type=True)
 
 
 def decode_fit_res(b: bytes) -> FitRes:
+    if _is_flat(b):
+        head, fp = _flat_unframe(b)
+        return FitRes(fp.to_arrays(), head["n"], head.get("m", {}), flat=fp)
     d = msgpack.unpackb(b, raw=False)
     return FitRes([_unpack_array(a) for a in d["p"]], d["n"], d["m"])
 
 
-def encode_evaluate_ins(x: EvaluateIns) -> bytes:
+def encode_evaluate_ins(x: EvaluateIns, codec: Optional[str] = None) -> bytes:
+    if (codec or _DEFAULT_CODEC) == "flat":
+        fp = _as_flat(x.parameters, x.flat)
+        return _flat_frame({"l": _leaf_sig(fp), "c": _enc_config(x.config)}, fp)
     return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
                           "c": _enc_config(x.config)}, use_bin_type=True)
 
 
 def decode_evaluate_ins(b: bytes) -> EvaluateIns:
+    if _is_flat(b):
+        head, fp = _flat_unframe(b, writable=True)
+        return EvaluateIns(fp.to_arrays(), head.get("c", {}), flat=fp)
     d = msgpack.unpackb(b, raw=False)
     return EvaluateIns([_unpack_array(a) for a in d["p"]], d["c"])
 

@@ -3,27 +3,37 @@
 Mods wrap the client's task handling: ``mod(task_ins, call_next) ->
 task_res``.  They compose; ClientApp applies them outermost-first.
 
+All three mods operate on the **flat buffer** (one contiguous vector per
+model, :class:`~repro.fl.flat.FlatParams`) rather than per-layer Python
+loops: one L2 norm, one noise draw, one quantize pass per update.  SecAgg
+mask *derivation* stays per-leaf (seed spawn keys) for bitwise wire
+compatibility with older peers; only the application is vectorized.
+
 - :class:`DPMod` — local DP: clip the client's model *delta* to an L2 bound
   and add gaussian noise (deterministic per (site, round) so experiments
   reproduce bitwise).
 - :class:`SecAggMod` + :class:`SecAggFedAvg` — pairwise-mask secure
   aggregation with exact fixed-point arithmetic: each pair of sites derives
   a shared seed (from provisioning), masks are ±PRG(seed, round) in uint64
-  mod-2^64 arithmetic, so they cancel exactly in the server's sum and the
-  server never sees an individual update.  The hot quantize+mask loop has a
-  Pallas TPU kernel (``repro.kernels.secagg_mask``); this mod uses the
-  numpy/jnp reference path (CPU container), kernels tests cross-check them.
-- :class:`TopKCompressionMod` — magnitude Top-K delta sparsification.
+  mod-2^64 arithmetic over the whole flat buffer, so they cancel exactly in
+  the server's sum and the server never sees an individual update.  The hot
+  quantize+mask loop has a Pallas TPU kernel
+  (``repro.kernels.secagg_mask``); this mod uses the numpy reference path
+  (CPU container), kernels tests cross-check them.
+- :class:`TopKCompressionMod` — magnitude Top-K delta sparsification,
+  global over the flat delta (a single threshold for the whole model,
+  which keeps the largest-magnitude coordinates regardless of layer).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from dataclasses import dataclass
+from typing import Callable, List, Sequence
 
 import numpy as np
 
+from repro.fl.flat import FlatParams, layout_for, unflatten_vector
 from repro.fl.messages import (FitRes, TaskIns, TaskRes, decode_fit_ins,
-                               decode_fit_res, encode_fit_ins, encode_fit_res)
+                               decode_fit_res, encode_fit_res)
 
 NDArrays = List[np.ndarray]
 
@@ -48,6 +58,22 @@ def _prg_mask(seed: int, round_: int, leaf: int, shape, positive: bool
     return m if positive else (np.uint64(0) - m)
 
 
+def _prg_mask_flat(seed: int, round_: int, layout, positive: bool
+                   ) -> np.ndarray:
+    """Whole-model mask as one vector.
+
+    Derivation is deliberately kept per-leaf with the seed's
+    ``spawn_key=(round, leaf)`` so masked shares stay **bitwise identical**
+    to what older (per-array codec) peers produce — a mixed-version fleet's
+    masks must still cancel mod 2^64.  Only the application is flat.
+    """
+    out = np.empty(layout.total_size, np.uint64)
+    for i, spec in enumerate(layout.leaves):
+        out[spec.eoffset:spec.eoffset + spec.size] = \
+            _prg_mask(seed, round_, i, spec.shape, positive).ravel()
+    return out
+
+
 def quantize(a: np.ndarray) -> np.ndarray:
     q = np.round(a.astype(np.float64) * float(QUANT_SCALE)).astype(np.int64)
     return q.view(np.uint64) if q.dtype == np.int64 else q.astype(np.uint64)
@@ -56,6 +82,10 @@ def quantize(a: np.ndarray) -> np.ndarray:
 def dequantize(q: np.ndarray, count: int = 1) -> np.ndarray:
     signed = q.astype(np.uint64).view(np.int64).astype(np.float64)
     return (signed / float(QUANT_SCALE)).astype(np.float32)
+
+
+def _u64_layout(layout):
+    return layout_for([("uint64", l.shape) for l in layout.leaves])
 
 
 # ---------------------------------------------------------------------------
@@ -76,23 +106,24 @@ class DPMod:
         if res.error:
             return res
         fit = decode_fit_res(res.payload)
-        delta = [np.asarray(o, np.float64) - np.asarray(i, np.float64)
-                 for o, i in zip(fit.parameters, ins.parameters)]
-        norm = _l2(delta)
+        ofp = _flat_of(fit)
+        layout = ofp.layout
+        base = ins.flat if ins.flat is not None else \
+            FlatParams.from_arrays(ins.parameters)
+        i64 = base.to_f64()
+        delta = ofp.to_f64()
+        delta -= i64
+        norm = float(np.sqrt(np.dot(delta, delta)))
         scale = min(1.0, self.clip_norm / max(norm, 1e-12))
         rng = np.random.default_rng(
             np.random.SeedSequence(entropy=self.seed,
                                    spawn_key=(self.site_id, task.round)))
         sigma = self.noise_multiplier * self.clip_norm
-        new_params = []
-        for i, d in enumerate(delta):
-            noised = d * scale
-            if sigma > 0:
-                noised = noised + rng.normal(0.0, sigma, size=d.shape)
-            new_params.append(
-                (np.asarray(ins.parameters[i], np.float64) + noised)
-                .astype(fit.parameters[i].dtype))
-        fit.parameters = new_params
+        delta *= np.float64(scale)
+        if sigma > 0:
+            delta += rng.normal(0.0, sigma, size=delta.shape)
+        i64 += delta
+        fit.set_parameters(unflatten_vector(i64, layout))
         fit.metrics = dict(fit.metrics, dp_clip_scale=scale, dp_pre_norm=norm)
         return TaskRes("fit", task.round, encode_fit_res(fit),
                        task_id=task.task_id)
@@ -103,7 +134,7 @@ class DPMod:
 # ---------------------------------------------------------------------------
 @dataclass
 class SecAggMod:
-    """Masks the (num_examples-weighted) quantized parameters."""
+    """Masks the (num_examples-weighted) quantized flat buffer."""
 
     site: str = ""
     peers: Sequence[str] = ()
@@ -116,45 +147,73 @@ class SecAggMod:
         if res.error:
             return res
         fit = decode_fit_res(res.payload)
-        w = float(fit.num_examples)
-        masked = []
-        for leaf, a in enumerate(fit.parameters):
-            q = quantize(np.asarray(a, np.float64) * w)
-            for peer in self.peers:
-                if peer == self.site:
-                    continue
-                seed = self.pairwise_seed_fn(self.site, peer)
-                q = q + _prg_mask(seed, task.round, leaf, q.shape,
-                                  positive=self.site < peer)
-            masked.append(q)
-        fit.parameters = masked
+        fp = _flat_of(fit)
+        x = fp.to_f64()
+        x *= np.float64(fit.num_examples)
+        q = quantize(x)
+        for peer in self.peers:
+            if peer == self.site:
+                continue
+            seed = self.pairwise_seed_fn(self.site, peer)
+            q += _prg_mask_flat(seed, task.round, fp.layout,
+                                positive=self.site < peer)
+        masked = FlatParams(q.view(np.uint8), _u64_layout(fp.layout))
+        fit.set_parameters(masked.to_arrays(), flat=masked)
         fit.metrics = dict(fit.metrics, secagg=1)
         return TaskRes("fit", task.round, encode_fit_res(fit),
                        task_id=task.task_id)
 
 
-from repro.fl.strategy import FedAvg  # noqa: E402  (avoid cycle at import top)
+from repro.fl.strategy import (FedAvg, FitAccumulator,  # noqa: E402
+                               _flat_of)  # (avoid cycle at import top)
+
+
+class _SecAggFitAcc(FitAccumulator):
+    """Streaming mod-2^64 sum: each masked share folds into one uint64
+    accumulator on arrival (masks cancel exactly), so the server never
+    holds more than one share beyond the accumulator."""
+
+    def __init__(self, strategy, rnd, current):
+        super().__init__(strategy, rnd, current)
+        self._acc = None
+        self._layout = None
+        self.total_w = 0.0
+        self.count = 0
+
+    def add(self, node, res):
+        fp = _flat_of(res)
+        if self._acc is None:
+            self._layout = fp.layout
+            self._acc = np.zeros(fp.layout.total_size, np.uint64)
+        self._acc += fp.math_view()
+        self.total_w += float(res.num_examples)
+        self.count += 1
+
+    def finalize(self, failures):
+        if failures:
+            raise RuntimeError(
+                f"secure aggregation needs every masked share; missing "
+                f"{[f for f, _ in failures]}")
+        vec = dequantize(self._acc) / self.total_w
+        out = [vec[l.eoffset:l.eoffset + l.size].reshape(l.shape)
+               .astype(np.float32) for l in self._layout.leaves]
+        return out, {"num_clients": self.count, "secagg": 1}
 
 
 @dataclass
 class SecAggFedAvg(FedAvg):
     """Server side of the pairwise-mask protocol: SUM the masked uint64
-    tensors (masks cancel exactly mod 2^64), then dequantize and divide by
-    the total example count."""
+    flat buffers (masks cancel exactly mod 2^64), then dequantize and
+    divide by the total example count."""
+
+    def fit_accumulator(self, rnd, current):
+        return _SecAggFitAcc(self, rnd, current)
 
     def aggregate_fit(self, rnd, results, failures, current):
-        if failures:
-            raise RuntimeError(
-                f"secure aggregation needs every masked share; missing "
-                f"{[f for f, _ in failures]}")
-        total_w = float(sum(r.num_examples for _, r in results))
-        out = []
-        for leaf in range(len(results[0][1].parameters)):
-            acc = np.zeros_like(results[0][1].parameters[leaf], dtype=np.uint64)
-            for _, r in results:
-                acc = acc + r.parameters[leaf].astype(np.uint64)
-            out.append((dequantize(acc) / total_w).astype(np.float32))
-        return out, {"num_clients": len(results), "secagg": 1}
+        acc = _SecAggFitAcc(self, rnd, current)
+        for node, r in results:
+            acc.add(node, r)
+        return acc.finalize(failures)
 
 
 # ---------------------------------------------------------------------------
@@ -172,19 +231,20 @@ class TopKCompressionMod:
         if res.error:
             return res
         fit = decode_fit_res(res.payload)
-        kept = 0
-        total = 0
-        new_params = []
-        for o, i in zip(fit.parameters, ins.parameters):
-            d = np.asarray(o, np.float64) - np.asarray(i, np.float64)
-            k = max(1, int(np.ceil(self.fraction * d.size)))
-            thresh = np.partition(np.abs(d).ravel(), -k)[-k]
-            mask = np.abs(d) >= thresh
-            kept += int(mask.sum())
-            total += d.size
-            new_params.append((np.asarray(i, np.float64) + d * mask
-                               ).astype(o.dtype))
-        fit.parameters = new_params
-        fit.metrics = dict(fit.metrics, topk_kept_frac=kept / max(total, 1))
+        ofp = _flat_of(fit)
+        layout = ofp.layout
+        base = ins.flat if ins.flat is not None else \
+            FlatParams.from_arrays(ins.parameters)
+        i64 = base.to_f64()
+        d = ofp.to_f64()
+        d -= i64
+        k = max(1, int(np.ceil(self.fraction * d.size)))
+        absd = np.abs(d)
+        thresh = np.partition(absd.ravel(), -k)[-k]
+        mask = absd >= thresh
+        kept = int(mask.sum())
+        i64 += d * mask
+        fit.set_parameters(unflatten_vector(i64, layout))
+        fit.metrics = dict(fit.metrics, topk_kept_frac=kept / max(d.size, 1))
         return TaskRes("fit", task.round, encode_fit_res(fit),
                        task_id=task.task_id)

@@ -17,8 +17,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.fl.messages import (EvaluateIns, EvaluateRes, FitIns, FitRes,
-                               TaskIns, TaskRes, decode_evaluate_res,
+from repro.fl.messages import (EvaluateRes, TaskIns, decode_evaluate_res,
                                decode_fit_res, decode_task_res,
                                encode_evaluate_ins, encode_fit_ins,
                                encode_task_ins, bytes_to_arrays)
@@ -43,6 +42,19 @@ class Driver:
                          timeout: float) -> Dict[str, bytes]:
         """node_id -> TaskIns bytes; returns node_id -> TaskRes bytes."""
         raise NotImplementedError
+
+    def send_and_receive_iter(self, tasks: Dict[str, bytes], timeout: float):
+        """Yield (node_id, TaskRes bytes) pairs as results become
+        available, releasing each buffer to the consumer.
+
+        The default adapts the blocking API and yields in sorted node
+        order, which keeps aggregation deterministic; streaming transports
+        can override to yield in arrival order (the FedAvg-family
+        accumulators are order-insensitive up to fp64 rounding).
+        """
+        res = self.send_and_receive(tasks, timeout)
+        for node in sorted(res):
+            yield node, res.pop(node)
 
 
 @dataclass
@@ -93,17 +105,18 @@ class ServerApp:
                 t = TaskIns("fit", rnd, encode_fit_ins(ins),
                             task_id=uuid.uuid4().hex)
                 tasks[node] = encode_task_ins(t)
-            res = driver.send_and_receive(tasks, self.config.round_timeout)
-            fit_results: List[Tuple[str, FitRes]] = []
+            # results fold into the strategy's accumulator as they arrive
+            # (zero-copy flat views / streaming sums — no per-layer stacking)
+            acc = self.strategy.fit_accumulator(rnd, parameters)
             failures: List[Tuple[str, str]] = []
-            for node in sorted(res):                     # deterministic order
-                tr = decode_task_res(res[node])
+            for node, tr_bytes in driver.send_and_receive_iter(
+                    tasks, self.config.round_timeout):
+                tr = decode_task_res(tr_bytes)
                 if tr.error:
                     failures.append((node, tr.error))
                 else:
-                    fit_results.append((node, decode_fit_res(tr.payload)))
-            parameters, agg_metrics = self.strategy.aggregate_fit(
-                rnd, fit_results, failures, parameters)
+                    acc.add(node, decode_fit_res(tr.payload))
+            parameters, agg_metrics = acc.finalize(failures)
 
             # ---- evaluate phase ------------------------------------------
             ev_cfg = self.strategy.configure_evaluate(rnd, parameters, nodes)

@@ -1,8 +1,23 @@
 """FL strategies (the Flower ecosystem the FLARE side gains access to).
 
-All operate on ``NDArrays`` (list of numpy arrays) with float64 accumulation
-so aggregation is deterministic and ordering-insensitive up to the sorted
-client order the ServerApp enforces.
+All public APIs still speak ``NDArrays`` (list of numpy arrays), but every
+aggregation hot path now runs on :class:`~repro.fl.flat.FlatParams` — one
+contiguous buffer per model — through the vectorized kernels in
+:mod:`repro.fl.agg_kernels`:
+
+- FedAvg is a cache-blocked weighted sum whose output is **bitwise
+  identical** to the seed per-layer loop (see ``legacy.py``);
+- FedAvgM / FedAdam / FedYogi keep their server state (velocity, moments)
+  as single fp64 vectors and apply fused elementwise updates;
+- FedMedian / FedTrimmedMean reduce chunk-stacked (clients, CHUNK) tiles;
+- Krum computes all pairwise distances from one chunk-accumulated Gram
+  matrix instead of the O(n^2) Python loop.
+
+Strategies also expose :meth:`Strategy.fit_accumulator`, the incremental
+aggregation protocol the ServerApp drives: results are folded in (or
+referenced zero-copy) as they arrive instead of being stacked into
+per-layer Python lists.  Aggregation stays deterministic and
+ordering-insensitive up to the sorted client order the ServerApp enforces.
 
 Implemented: FedAvg, FedAvgM (server momentum), FedAdam / FedYogi
 (adaptive server optimizers, Reddi et al. 2021), FedProx (proximal client
@@ -16,18 +31,49 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.fl import agg_kernels as kernels
+from repro.fl.flat import FlatParams, Layout, unflatten_vector
 from repro.fl.messages import EvaluateIns, EvaluateRes, FitIns, FitRes
 
 NDArrays = List[np.ndarray]
 
 
+def _flat_of(res: FitRes) -> FlatParams:
+    """The FitRes's zero-copy flat view, packing only if it has none."""
+    return res.flat if res.flat is not None else \
+        FlatParams.from_arrays(res.parameters)
+
+
 def weighted_average(results: List[Tuple[NDArrays, float]]) -> NDArrays:
-    total = float(sum(w for _, w in results))
-    out = [np.zeros_like(a, dtype=np.float64) for a in results[0][0]]
-    for arrays, w in results:
-        for i, a in enumerate(arrays):
-            out[i] += (w / total) * a.astype(np.float64)
-    return [o.astype(results[0][0][i].dtype) for i, o in enumerate(out)]
+    """Weighted mean of NDArrays lists (flat fast path, legacy-exact)."""
+    pairs = [(FlatParams.from_arrays(arrays), w) for arrays, w in results]
+    return kernels.weighted_mean(pairs, pairs[0][0].layout).to_arrays()
+
+
+# ---------------------------------------------------------------------------
+# incremental aggregation protocol
+# ---------------------------------------------------------------------------
+class FitAccumulator:
+    """Consumes FitRes one at a time; finalize() yields the new params.
+
+    The base implementation simply collects and defers to the strategy's
+    ``aggregate_fit`` — the compatibility path for strategies that only
+    implement the batch API.
+    """
+
+    def __init__(self, strategy: "Strategy", rnd: int, current: NDArrays):
+        self.strategy = strategy
+        self.rnd = rnd
+        self.current = current
+        self.results: List[Tuple[str, FitRes]] = []
+
+    def add(self, node: str, res: FitRes) -> None:
+        self.results.append((node, res))
+
+    def finalize(self, failures: List[Tuple[str, str]]
+                 ) -> Tuple[NDArrays, Dict[str, Any]]:
+        return self.strategy.aggregate_fit(self.rnd, self.results, failures,
+                                           self.current)
 
 
 class Strategy:
@@ -37,6 +83,10 @@ class Strategy:
     def configure_fit(self, rnd: int, parameters: NDArrays,
                       nodes: Sequence[str]) -> Dict[str, FitIns]:
         return {n: FitIns(parameters, {"round": rnd}) for n in nodes}
+
+    def fit_accumulator(self, rnd: int, current: NDArrays) -> FitAccumulator:
+        """Incremental aggregation entry point used by the ServerApp."""
+        return FitAccumulator(self, rnd, current)
 
     def aggregate_fit(self, rnd: int, results: List[Tuple[str, FitRes]],
                       failures: List[Tuple[str, str]],
@@ -67,85 +117,138 @@ class Strategy:
         return float(loss), metrics
 
 
+# ---------------------------------------------------------------------------
+# FedAvg family (weighted-sum kernel + optional server optimizer)
+# ---------------------------------------------------------------------------
+class _WeightedFitAcc(FitAccumulator):
+    """FedAvg-family accumulator.
+
+    Default mode keeps zero-copy FlatParams references (no per-layer
+    stacking; memory is just the already-received payload bytes) and runs
+    the bitwise-legacy-exact deferred kernel at finalize.  ``low_memory``
+    folds each result into one fp64 accumulator on arrival instead, so
+    peak memory is a single model-size vector.
+    """
+
+    def __init__(self, strategy: "FedAvg", rnd: int, current: NDArrays):
+        super().__init__(strategy, rnd, current)
+        self.pairs: List[Tuple[FlatParams, float]] = []
+        self._streaming: Optional[kernels.StreamingWeightedSum] = None
+        self._count = 0
+
+    def add(self, node: str, res: FitRes) -> None:
+        fp = _flat_of(res)
+        w = float(res.num_examples)
+        self._count += 1
+        if self.strategy.low_memory:
+            if self._streaming is None:
+                self._streaming = kernels.StreamingWeightedSum(fp.layout)
+            self._streaming.add(fp, w)      # payload is droppable after this
+        else:
+            self.pairs.append((fp, w))
+
+    def finalize(self, failures: List[Tuple[str, str]]
+                 ) -> Tuple[NDArrays, Dict[str, Any]]:
+        st = self.strategy
+        if self._count < st.min_fit_clients:
+            raise RuntimeError(
+                f"round {self.rnd}: {self._count} results < min "
+                f"{st.min_fit_clients} (failures: {failures})")
+        if self._streaming is not None:
+            target = self._streaming.finalize()
+        else:
+            target = kernels.weighted_mean(self.pairs, self.pairs[0][0].layout)
+        metrics = {"num_clients": self._count}
+        return st._server_opt(self.rnd, target, self.current), metrics
+
+
 @dataclass
 class FedAvg(Strategy):
     initial_parameters: Optional[NDArrays] = None
     min_fit_clients: int = 1
+    low_memory: bool = False
 
     def initialize_parameters(self):
         return self.initial_parameters
 
+    def fit_accumulator(self, rnd, current):
+        if type(self).aggregate_fit is not FedAvg.aggregate_fit:
+            # subclass overrode the batch API only — honor it
+            return FitAccumulator(self, rnd, current)
+        return _WeightedFitAcc(self, rnd, current)
+
     def aggregate_fit(self, rnd, results, failures, current):
-        if len(results) < self.min_fit_clients:
-            raise RuntimeError(
-                f"round {rnd}: {len(results)} results < min {self.min_fit_clients}"
-                f" (failures: {failures})")
-        agg = weighted_average(
-            [(r.parameters, r.num_examples) for _, r in results])
-        return agg, {"num_clients": len(results)}
+        acc = _WeightedFitAcc(self, rnd, current)
+        for node, r in results:
+            acc.add(node, r)
+        return acc.finalize(failures)
+
+    # hook: turn the weighted mean into the next global model
+    def _server_opt(self, rnd: int, target: FlatParams,
+                    current: NDArrays) -> NDArrays:
+        return target.to_arrays()
 
 
 @dataclass
 class FedAvgM(FedAvg):
     server_lr: float = 1.0
     momentum: float = 0.9
-    _velocity: Optional[NDArrays] = field(default=None, repr=False)
+    _velocity: Optional[np.ndarray] = field(default=None, repr=False)
 
-    def aggregate_fit(self, rnd, results, failures, current):
-        target, m = FedAvg.aggregate_fit(self, rnd, results, failures, current)
-        delta = [t.astype(np.float64) - c.astype(np.float64)
-                 for t, c in zip(target, current)]
+    def _server_opt(self, rnd, target, current):
+        cur = FlatParams.from_arrays(current, target.layout).to_f64()
+        delta = target.to_f64()
+        delta -= cur
         if self._velocity is None:
-            self._velocity = [np.zeros_like(d) for d in delta]
-        self._velocity = [self.momentum * v + d
-                          for v, d in zip(self._velocity, delta)]
-        new = [c.astype(np.float64) + self.server_lr * v
-               for c, v in zip(current, self._velocity)]
-        return [n.astype(c.dtype) for n, c in zip(new, current)], m
+            self._velocity = np.zeros_like(delta)
+        self._velocity *= np.float64(self.momentum)
+        self._velocity += delta
+        cur += np.float64(self.server_lr) * self._velocity
+        return unflatten_vector(cur, target.layout)
 
 
 @dataclass
 class _AdaptiveBase(FedAvg):
-    """Server-side adaptive optimizers (FedOpt family)."""
+    """Server-side adaptive optimizers (FedOpt family), fused over the
+    flat fp64 state vectors."""
 
     server_lr: float = 0.1
     beta1: float = 0.9
     beta2: float = 0.99
     tau: float = 1e-3
-    _m: Optional[NDArrays] = field(default=None, repr=False)
-    _v: Optional[NDArrays] = field(default=None, repr=False)
+    _m: Optional[np.ndarray] = field(default=None, repr=False)
+    _v: Optional[np.ndarray] = field(default=None, repr=False)
 
-    def _second_moment(self, v, d):
+    def _second_moment(self, v: np.ndarray, d: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
-    def aggregate_fit(self, rnd, results, failures, current):
-        target, metrics = FedAvg.aggregate_fit(self, rnd, results, failures,
-                                               current)
-        delta = [t.astype(np.float64) - c.astype(np.float64)
-                 for t, c in zip(target, current)]
+    def _server_opt(self, rnd, target, current):
+        cur = FlatParams.from_arrays(current, target.layout).to_f64()
+        d = target.to_f64()
+        d -= cur
         if self._m is None:
-            self._m = [np.zeros_like(d) for d in delta]
-            self._v = [np.full_like(d, self.tau ** 2) for d in delta]
-        self._m = [self.beta1 * m + (1 - self.beta1) * d
-                   for m, d in zip(self._m, delta)]
-        self._v = [self._second_moment(v, d) for v, d in zip(self._v, delta)]
-        new = [c.astype(np.float64)
-               + self.server_lr * m / (np.sqrt(v) + self.tau)
-               for c, m, v in zip(current, self._m, self._v)]
-        return [n.astype(c.dtype) for n, c in zip(new, current)], metrics
+            self._m = np.zeros_like(d)
+            self._v = np.full_like(d, self.tau ** 2)
+        self._m *= np.float64(self.beta1)
+        self._m += np.float64(1 - self.beta1) * d
+        self._v = self._second_moment(self._v, d)
+        cur += np.float64(self.server_lr) * self._m \
+            / (np.sqrt(self._v) + np.float64(self.tau))
+        return unflatten_vector(cur, target.layout)
 
 
 @dataclass
 class FedAdam(_AdaptiveBase):
     def _second_moment(self, v, d):
-        return self.beta2 * v + (1 - self.beta2) * np.square(d)
+        return np.float64(self.beta2) * v \
+            + np.float64(1 - self.beta2) * np.square(d)
 
 
 @dataclass
 class FedYogi(_AdaptiveBase):
     def _second_moment(self, v, d):
         d2 = np.square(d)
-        return v - (1 - self.beta2) * d2 * np.sign(v - d2)
+        return v - np.float64(1 - self.beta2) * d2 * np.sign(v - d2)
 
 
 @dataclass
@@ -160,54 +263,72 @@ class FedProx(FedAvg):
                 for n in nodes}
 
 
-@dataclass
-class FedMedian(FedAvg):
+# ---------------------------------------------------------------------------
+# robust aggregation (stacked-tile kernels)
+# ---------------------------------------------------------------------------
+class _StackedFitAcc(FitAccumulator):
+    """Keeps zero-copy flat references; finalize hands them to the
+    strategy's stacked kernel in one call."""
+
+    def __init__(self, strategy, rnd, current):
+        super().__init__(strategy, rnd, current)
+        self.flats: List[FlatParams] = []
+        self.weights: List[float] = []
+
+    def add(self, node, res):
+        self.flats.append(_flat_of(res))
+        self.weights.append(float(res.num_examples))
+
+    def finalize(self, failures):
+        return self.strategy._aggregate_flats(self.rnd, self.flats,
+                                              self.weights, failures)
+
+
+class _StackedStrategyMixin:
+    def fit_accumulator(self, rnd, current):
+        return _StackedFitAcc(self, rnd, current)
+
     def aggregate_fit(self, rnd, results, failures, current):
-        stacked = [np.median(np.stack([r.parameters[i].astype(np.float64)
-                                       for _, r in results]), axis=0)
-                   for i in range(len(results[0][1].parameters))]
-        return ([s.astype(current[i].dtype) for i, s in enumerate(stacked)],
-                {"num_clients": len(results)})
+        acc = _StackedFitAcc(self, rnd, current)
+        for node, r in results:
+            acc.add(node, r)
+        return acc.finalize(failures)
 
 
 @dataclass
-class FedTrimmedMean(FedAvg):
+class FedMedian(_StackedStrategyMixin, FedAvg):
+    def _aggregate_flats(self, rnd, flats, weights, failures):
+        out = kernels.median(flats, flats[0].layout)
+        return out.to_arrays(), {"num_clients": len(flats)}
+
+
+@dataclass
+class FedTrimmedMean(_StackedStrategyMixin, FedAvg):
     beta: float = 0.2      # fraction trimmed at each end
 
-    def aggregate_fit(self, rnd, results, failures, current):
-        k = int(self.beta * len(results))
-        out = []
-        for i in range(len(results[0][1].parameters)):
-            stack = np.sort(np.stack([r.parameters[i].astype(np.float64)
-                                      for _, r in results]), axis=0)
-            sl = stack[k:len(results) - k] if len(results) > 2 * k else stack
-            out.append(np.mean(sl, axis=0).astype(current[i].dtype))
-        return out, {"num_clients": len(results), "trimmed_each_end": k}
+    def _aggregate_flats(self, rnd, flats, weights, failures):
+        k = int(self.beta * len(flats))
+        out = kernels.trimmed_mean(flats, flats[0].layout, k)
+        return out.to_arrays(), {"num_clients": len(flats),
+                                 "trimmed_each_end": k}
 
 
 @dataclass
-class Krum(FedAvg):
+class Krum(_StackedStrategyMixin, FedAvg):
     """Multi-Krum (Blanchard et al. 2017): pick the update closest to its
     n-f-2 nearest neighbours; tolerates f byzantine clients."""
 
     num_byzantine: int = 0
     num_selected: int = 1
 
-    def aggregate_fit(self, rnd, results, failures, current):
-        vecs = [np.concatenate([a.astype(np.float64).ravel()
-                                for a in r.parameters])
-                for _, r in results]
-        n = len(vecs)
-        f = min(self.num_byzantine, max(0, (n - 3) // 2))
-        scores = []
-        for i in range(n):
-            d = sorted(float(np.sum((vecs[i] - vecs[j]) ** 2))
-                       for j in range(n) if j != i)
-            scores.append(sum(d[: max(n - f - 2, 1)]))
+    def _aggregate_flats(self, rnd, flats, weights, failures):
+        layout = flats[0].layout
+        D = kernels.krum_distances(flats, layout)
+        scores = kernels.krum_scores(D, self.num_byzantine)
         chosen = np.argsort(scores)[: max(self.num_selected, 1)]
-        sel = [(results[i][1].parameters, results[i][1].num_examples)
-               for i in chosen]
-        return weighted_average(sel), {"krum_selected": [int(c) for c in chosen]}
+        sel = [(flats[i], weights[i]) for i in chosen]
+        out = kernels.weighted_mean(sel, layout)
+        return out.to_arrays(), {"krum_selected": [int(c) for c in chosen]}
 
 
 def make_strategy(name: str, **kw) -> Strategy:

@@ -23,12 +23,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_COMPILER_PARAMS = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _choose_block(S: int, requested: int) -> int:
+    """Pick a block size for a sequence of length ``S``.
+
+    Prefer the largest divisor of ``S`` that is <= ``requested`` and keeps
+    tiles lane-aligned (multiple of 8), falling back to ``S`` itself when it
+    is small. If no aligned divisor exists (prime/odd ``S``), keep the
+    requested block and let the caller pad the sequence up to a multiple of
+    it — never degrade toward block size 1, which serializes the grid.
+    """
+    b = max(1, min(requested, S))
+    if S % b == 0:
+        return b
+    for cand in range(b, 7, -1):
+        if S % cand == 0 and cand % 8 == 0:
+            return cand
+    return b
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             causal: bool, window: int, block_q: int, block_kv: int,
-            num_kv_blocks: int):
+            num_kv_blocks: int, seq_len: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -45,7 +67,7 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     s = jnp.dot(q, k.T)                              # (bq, bkv) on the MXU
     qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
     kpos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    mask = jnp.ones_like(s, dtype=jnp.bool_)
+    mask = kpos < seq_len                # padded kv positions contribute 0
     if causal:
         mask &= kpos <= qpos
     if window:
@@ -77,19 +99,21 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     KV = k.shape[2]
     g = H // KV
     hdv = v.shape[-1]
-    block_q = min(block_q, S)
-    block_kv = min(block_kv, S)
-    while S % block_q:
-        block_q -= 1
-    while S % block_kv:
-        block_kv -= 1
-    nq = S // block_q
-    nk = S // block_kv
+    block_q = _choose_block(S, block_q)
+    block_kv = _choose_block(S, block_kv)
+    # smallest common padded length (equals S whenever both blocks divide S)
+    l = math.lcm(block_q, block_kv)
+    S_pad = -(-S // l) * l
+    nq = S_pad // block_q
+    nk = S_pad // block_kv
 
     # flatten (B, H) into the major grid axis; kv head = q head // g
     qf = jnp.moveaxis(q, 2, 1).reshape(B * H, S, hd)
     kf = jnp.moveaxis(k, 2, 1).reshape(B * KV, S, hd)
     vf = jnp.moveaxis(v, 2, 1).reshape(B * KV, S, hdv)
+    if S_pad != S:
+        pad = ((0, 0), (0, S_pad - S), (0, 0))
+        qf, kf, vf = (jnp.pad(x, pad) for x in (qf, kf, vf))
 
     def q_index(h, i, j):
         return (h, i, 0)
@@ -99,7 +123,7 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
 
     kernel = functools.partial(
         _kernel, causal=causal, window=window, block_q=block_q,
-        block_kv=block_kv, num_kv_blocks=nk)
+        block_kv=block_kv, num_kv_blocks=nk, seq_len=S)
 
     out = pl.pallas_call(
         kernel,
@@ -110,15 +134,15 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, block_kv, hdv), kv_index),
         ],
         out_specs=pl.BlockSpec((1, block_q, hdv), q_index),
-        out_shape=jax.ShapeDtypeStruct((B * H, S, hdv), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B * H, S_pad, hdv), q.dtype),
         scratch_shapes=[
             # online-softmax state persists across the kv (minor) grid axis
             pltpu.VMEM((block_q, 1), jnp.float32),      # running max m
             pltpu.VMEM((block_q, 1), jnp.float32),      # running sum l
             pltpu.VMEM((block_q, hdv), jnp.float32),    # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qf, kf, vf)
-    return jnp.moveaxis(out.reshape(B, H, S, hdv), 1, 2)
+    return jnp.moveaxis(out[:, :S].reshape(B, H, S, hdv), 1, 2)

@@ -18,6 +18,8 @@ from repro.runtime.reliable import ReliableMessenger
 from repro.runtime.transport import Message
 
 _FMT = "!d i"   # value, step
+_BATCH_MAGIC = 0xFB   # legacy frames start with the high byte of a u16 tag
+                      # length (< 0xFB for any sane tag), so this is unambiguous
 
 
 def _encode(tag: str, value: float, step: int) -> bytes:
@@ -30,6 +32,26 @@ def _decode(b: bytes) -> Tuple[str, float, int]:
     tag = b[2:2 + n].decode()
     value, step = struct.unpack_from(_FMT, b, 2 + n)
     return tag, value, step
+
+
+def _encode_batch(items: List[Tuple[str, float, int]]) -> bytes:
+    parts = [struct.pack("!BH", _BATCH_MAGIC, len(items))]
+    for tag, value, step in items:
+        parts.append(_encode(tag, float(value), int(step)))
+    return b"".join(parts)
+
+
+def _decode_batch(b: bytes) -> List[Tuple[str, float, int]]:
+    (count,) = struct.unpack_from("!H", b, 1)
+    off = 3
+    out = []
+    for _ in range(count):
+        (n,) = struct.unpack_from("!H", b, off)
+        tag = b[off + 2:off + 2 + n].decode()
+        value, step = struct.unpack_from(_FMT, b, off + 2 + n)
+        out.append((tag, value, step))
+        off += 2 + n + struct.calcsize(_FMT)
+    return out
 
 
 class SummaryWriter:
@@ -46,6 +68,16 @@ class SummaryWriter:
         payload = _encode(f"{self._site}/{tag}", float(value), int(global_step))
         self._m.notify(self._server, self._topic, payload)
 
+    def add_scalars(self, tag_values: Dict[str, float],
+                    global_step: int = 0) -> None:
+        """Batched variant: one EVENT round-trip for a whole dict of
+        per-step metrics instead of one ``notify`` per scalar."""
+        if not tag_values:
+            return
+        items = [(f"{self._site}/{tag}", float(v), int(global_step))
+                 for tag, v in tag_values.items()]
+        self._m.notify(self._server, self._topic, _encode_batch(items))
+
 
 class MetricCollector:
     """Server-side sink; one per job. Thread-safe."""
@@ -55,9 +87,14 @@ class MetricCollector:
         self._lock = threading.Lock()
 
     def on_event(self, msg: Message) -> bytes:
-        tag, value, step = _decode(msg.payload)
+        if msg.payload and msg.payload[0] == _BATCH_MAGIC:
+            items = _decode_batch(msg.payload)
+        else:
+            items = [_decode(msg.payload)]
+        now = time.time()
         with self._lock:
-            self._series[tag].append((step, value, time.time()))
+            for tag, value, step in items:
+                self._series[tag].append((step, value, now))
         return b""
 
     def series(self, tag: str) -> List[Tuple[int, float]]:

@@ -1,0 +1,105 @@
+"""Deterministic fallback for `hypothesis` on bare environments.
+
+Tier-1 tests must collect and run without any dev dependencies installed
+(ROADMAP: `python -m pytest -x -q` on a stock container).  When the real
+`hypothesis` package is available it is always preferred (see the
+try/except import in each test module); this shim only provides enough of
+the API surface the test-suite actually uses:
+
+    given, settings, strategies.{floats,integers,booleans,lists,
+                                 sampled_from,tuples,just}
+
+Draws are pseudo-random from a fixed seed, and the first two examples of
+every bounded scalar strategy are its endpoints, so each property still
+gets deterministic smoke + edge coverage — just not hypothesis's shrinking
+or database. Property failures therefore reproduce exactly across runs.
+"""
+from __future__ import annotations
+
+
+import random
+from types import SimpleNamespace
+from typing import Any, Callable, List
+
+_SEED = 0xF10E25
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random, int], Any]):
+        self._draw = draw
+
+
+def floats(min_value: float, max_value: float, **_kw) -> _Strategy:
+    def draw(rng: random.Random, example: int) -> float:
+        if example == 0:
+            return float(min_value)
+        if example == 1:
+            return float(max_value)
+        return rng.uniform(min_value, max_value)
+    return _Strategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    def draw(rng: random.Random, example: int) -> int:
+        if example == 0:
+            return int(min_value)
+        if example == 1:
+            return int(max_value)
+        return rng.randint(min_value, max_value)
+    return _Strategy(draw)
+
+
+def booleans() -> _Strategy:
+    return _Strategy(lambda rng, ex: (rng.random() < 0.5) if ex > 1 else bool(ex))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng, ex: elements[rng.randrange(len(elements))])
+
+
+def just(value) -> _Strategy:
+    return _Strategy(lambda rng, ex: value)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> _Strategy:
+    def draw(rng: random.Random, example: int) -> List[Any]:
+        n = min_size if example == 0 else rng.randint(min_size, max_size)
+        return [elements._draw(rng, 2) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def tuples(*strats: _Strategy) -> _Strategy:
+    return _Strategy(lambda rng, ex: tuple(s._draw(rng, ex) for s in strats))
+
+
+def settings(max_examples: int = 10, deadline=None, **_kw):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy, **kwstrats: _Strategy):
+    def deco(fn):
+        # NB: no functools.wraps — it would expose the wrapped signature via
+        # __wrapped__ and pytest would treat the drawn params as fixtures.
+        def runner():
+            n = getattr(runner, "_fallback_max_examples", 10)
+            rng = random.Random(_SEED)
+            for example in range(n):
+                vals = [s._draw(rng, example) for s in strats]
+                kw = {k: s._draw(rng, example) for k, s in kwstrats.items()}
+                fn(*vals, **kw)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner.__dict__.update(getattr(fn, "__dict__", {}))
+        return runner
+    return deco
+
+
+strategies = SimpleNamespace(
+    floats=floats, integers=integers, booleans=booleans, lists=lists,
+    sampled_from=sampled_from, just=just, tuples=tuples)

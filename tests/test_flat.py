@@ -1,0 +1,386 @@
+"""Flat-buffer codec + vectorized-strategy equivalence tests.
+
+Covers the guarantees the aggregation engine rests on:
+- bitwise round-trip of the flat wire format for every dtype (incl. bf16);
+- interop with the legacy per-array codec (decode auto-detects);
+- zero-copy decode (leaves are views into the received bytes);
+- every strategy's flat-path output matches the legacy per-layer path
+  exactly (FedAvg family, median, trimmed mean) or to within 1 ULP;
+- incremental (as-results-arrive) accumulation == batch aggregation.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import ml_dtypes
+
+from repro.fl import agg_kernels as kernels
+from repro.fl.flat import FlatParams, layout_of, unflatten_vector
+from repro.fl.legacy import LEGACY_TABLE
+from repro.fl.messages import (FitIns, FitRes, arrays_to_bytes,
+                               bytes_to_arrays, decode_fit_ins,
+                               decode_fit_res, encode_fit_ins,
+                               encode_fit_res, set_default_codec)
+from repro.fl.strategy import make_strategy
+
+RNG = np.random.default_rng(7)
+
+ALL_DTYPES = [np.float32, np.float64, np.float16, np.int32, np.int64,
+              np.int8, np.uint8, np.uint64, np.bool_, ml_dtypes.bfloat16]
+
+
+def _arrays(dtypes, shapes=None):
+    shapes = shapes or [(3, 4), (7,), (2, 2, 2), (1,)] * 3
+    out = []
+    for i, dt in enumerate(dtypes):
+        shape = shapes[i % len(shapes)]
+        a = RNG.normal(0, 3, size=shape)
+        if np.dtype(dt) == np.bool_:
+            out.append((a > 0).astype(np.bool_))
+        elif np.issubdtype(np.dtype(dt), np.integer):
+            out.append(a.astype(np.int64).astype(dt))
+        else:
+            out.append(a.astype(dt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# flat representation
+# ---------------------------------------------------------------------------
+def test_flat_roundtrip_all_dtypes_bitwise():
+    arrays = _arrays(ALL_DTYPES)
+    fp = FlatParams.from_arrays(arrays)
+    back = fp.to_arrays()
+    assert len(back) == len(arrays)
+    for a, b in zip(arrays, back):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+
+
+def test_layout_cache_interns():
+    a1 = _arrays([np.float32, np.float32])
+    a2 = [np.copy(x) for x in a1]
+    assert layout_of(a1) is layout_of(a2)
+
+
+def test_flat_math_view_and_f64():
+    arrays = [np.arange(6, dtype=np.float32).reshape(2, 3),
+              np.ones(4, np.float32)]
+    fp = FlatParams.from_arrays(arrays)
+    v = fp.math_view()
+    assert v.dtype == np.float32 and v.size == 10
+    np.testing.assert_array_equal(fp.to_f64(),
+                                  np.concatenate([a.ravel() for a in arrays])
+                                  .astype(np.float64))
+
+
+def test_unflatten_vector_casts_to_leaf_dtype():
+    arrays = _arrays([np.float32, np.float16])
+    layout = layout_of(arrays)
+    vec = np.arange(layout.total_size, dtype=np.float64)
+    leaves = unflatten_vector(vec, layout)
+    assert [l.dtype for l in leaves] == [np.dtype(np.float32),
+                                         np.dtype(np.float16)]
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+def test_flat_codec_fit_res_roundtrip_bitwise():
+    arrays = _arrays(ALL_DTYPES)
+    res = FitRes(arrays, 17, {"loss": 0.5, "tag": "x"})
+    dec = decode_fit_res(encode_fit_res(res, codec="flat"))
+    assert dec.num_examples == 17 and dec.metrics["loss"] == 0.5
+    for a, b in zip(arrays, dec.parameters):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        assert a.tobytes() == b.tobytes()
+    assert dec.flat is not None
+
+
+def test_flat_decode_is_zero_copy():
+    arrays = [RNG.normal(size=(64, 64)).astype(np.float32)]
+    b = encode_fit_res(FitRes(arrays, 1, {}), codec="flat")
+    dec = decode_fit_res(b)
+    # views into the message bytes, not fresh allocations
+    for leaf in dec.parameters:
+        assert not leaf.flags["OWNDATA"]
+        assert not leaf.flags["WRITEABLE"]
+    assert not dec.flat.buf.flags["OWNDATA"]
+
+
+def test_fit_ins_decode_is_writable():
+    """Clients may mutate fit() parameters in place (legacy contract), so
+    the client-facing decode copies the payload once into a writable
+    buffer; only the server-side FitRes hot path stays zero-copy."""
+    arrays = [RNG.normal(size=(8, 8)).astype(np.float32)]
+    dec = decode_fit_ins(encode_fit_ins(FitIns(arrays, {}), codec="flat"))
+    dec.parameters[0] += 1.0                 # must not raise
+    np.testing.assert_allclose(dec.parameters[0], arrays[0] + 1.0)
+
+
+def test_codec_interop_legacy_and_flat():
+    arrays = _arrays([np.float32, np.float64, np.int32])
+    ins = FitIns(arrays, {"round": 3})
+    for codec in ("legacy", "flat"):
+        dec = decode_fit_ins(encode_fit_ins(ins, codec=codec))
+        assert dec.config["round"] == 3
+        for a, b in zip(arrays, dec.parameters):
+            assert a.tobytes() == b.tobytes(), codec
+    # arrays_to_bytes round-trips through both codecs too
+    for codec in ("legacy", "flat"):
+        back = bytes_to_arrays(arrays_to_bytes(arrays, codec=codec))
+        for a, b in zip(arrays, back):
+            assert a.tobytes() == b.tobytes(), codec
+
+
+def test_default_codec_switch():
+    arrays = [np.ones(3, np.float32)]
+    prev = set_default_codec("legacy")
+    try:
+        b = encode_fit_res(FitRes(arrays, 1, {}))
+        assert b[0] != 0xF1                      # msgpack fixmap marker
+        assert decode_fit_res(b).parameters[0].tobytes() == \
+            arrays[0].tobytes()
+    finally:
+        set_default_codec(prev)
+    b = encode_fit_res(FitRes(arrays, 1, {}))
+    assert b[0] == 0xF1
+
+
+def test_flat_codec_empty_parameters():
+    dec = decode_fit_res(encode_fit_res(FitRes([], 1, {}), codec="flat"))
+    assert dec.parameters == []
+
+
+# ---------------------------------------------------------------------------
+# strategy equivalence: flat kernels vs legacy per-layer loops
+# ---------------------------------------------------------------------------
+def _make_results(n_clients=5, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    shapes = [(16, 8), (32,), (4, 4, 4), (1,)]
+    results = []
+    for c in range(n_clients):
+        arrays = [rng.normal(0, 1, size=s).astype(dtype) for s in shapes]
+        results.append((f"site-{c}", FitRes(arrays, 10 + 7 * c, {})))
+    current = [np.zeros(s, dtype) for s in shapes]
+    return results, current
+
+
+def _assert_leaves_close(got, want, exact=False):
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype
+        if exact:
+            np.testing.assert_array_equal(g, w)
+        else:
+            np.testing.assert_array_max_ulp(g, w, maxulp=1)
+
+
+STRATEGY_KW = {
+    "fedavgm": dict(server_lr=0.7, momentum=0.9),
+    "fedadam": dict(server_lr=0.1, beta1=0.9, beta2=0.99, tau=1e-3),
+    "fedyogi": dict(server_lr=0.1),
+    "fedtrimmedmean": dict(beta=0.25),
+    "krum": dict(num_byzantine=1, num_selected=2),
+}
+
+
+@pytest.mark.parametrize("name", sorted(LEGACY_TABLE))
+def test_strategy_matches_legacy(name):
+    kw = STRATEGY_KW.get(name, {})
+    new = make_strategy(name, **kw)
+    old = LEGACY_TABLE[name](**kw)
+    exact = name in ("fedavg", "fedmedian", "fedtrimmedmean", "krum")
+    current = None
+    cur_new = cur_old = None
+    for rnd in range(1, 4):                      # stateful over 3 rounds
+        results, current0 = _make_results(n_clients=6, seed=100 + rnd)
+        if cur_new is None:
+            cur_new, cur_old = current0, [np.copy(a) for a in current0]
+        got, m_new = new.aggregate_fit(rnd, results, [], cur_new)
+        want, m_old = old.aggregate_fit(rnd, results, [], cur_old)
+        _assert_leaves_close(got, want, exact=exact)
+        if name == "krum":
+            assert m_new["krum_selected"] == m_old["krum_selected"]
+        cur_new, cur_old = got, want
+
+
+def test_fedavg_matches_legacy_bitwise_f64_leaves():
+    results, current = _make_results(n_clients=4, seed=3, dtype=np.float64)
+    got, _ = make_strategy("fedavg").aggregate_fit(1, results, [], current)
+    want, _ = LEGACY_TABLE["fedavg"]().aggregate_fit(1, results, [], current)
+    _assert_leaves_close(got, want, exact=True)
+
+
+def test_incremental_accumulator_equals_batch():
+    st_ = make_strategy("fedavg")
+    results, current = _make_results(n_clients=5, seed=11)
+    acc = st_.fit_accumulator(1, current)
+    for node, r in results:
+        acc.add(node, r)
+    got, m = acc.finalize([])
+    want, _ = st_.aggregate_fit(1, results, [], current)
+    _assert_leaves_close(got, want, exact=True)
+    assert m["num_clients"] == 5
+
+
+def test_low_memory_streaming_within_ulp():
+    results, current = _make_results(n_clients=6, seed=13)
+    got, _ = make_strategy("fedavg", low_memory=True) \
+        .aggregate_fit(1, results, [], current)
+    want, _ = LEGACY_TABLE["fedavg"]().aggregate_fit(1, results, [], current)
+    _assert_leaves_close(got, want, exact=False)
+
+
+def test_fedavg_min_clients_enforced_by_accumulator():
+    st_ = make_strategy("fedavg", min_fit_clients=3)
+    results, current = _make_results(n_clients=2, seed=1)
+    with pytest.raises(RuntimeError):
+        st_.aggregate_fit(1, results, [], current)
+
+
+def test_strategy_accepts_mixed_dtype_leaves():
+    rng = np.random.default_rng(5)
+    shapes = [(8, 4), (16,)]
+    results = []
+    for c in range(4):
+        arrays = [rng.normal(size=shapes[0]).astype(np.float32),
+                  rng.normal(size=shapes[1]).astype(ml_dtypes.bfloat16)]
+        results.append((f"s{c}", FitRes(arrays, 5 + c, {})))
+    current = [np.zeros(shapes[0], np.float32),
+               np.zeros(shapes[1], ml_dtypes.bfloat16)]
+    got, _ = make_strategy("fedavg").aggregate_fit(1, results, [], current)
+    want, _ = LEGACY_TABLE["fedavg"]().aggregate_fit(1, results, [], current)
+    assert got[1].dtype == ml_dtypes.bfloat16
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g.astype(np.float32),
+                                      w.astype(np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8), st.integers(0, 1000))
+def test_weighted_mean_property(n_clients, seed):
+    """flat weighted mean == legacy per-layer loop, any client count."""
+    from repro.fl.legacy import legacy_weighted_average
+    from repro.fl.strategy import weighted_average
+
+    rng = np.random.default_rng(seed)
+    pairs = [([rng.normal(size=(5, 3)).astype(np.float32),
+               rng.normal(size=(7,)).astype(np.float32)],
+              float(rng.integers(1, 100))) for _ in range(n_clients)]
+    got = weighted_average(pairs)
+    want = legacy_weighted_average(pairs)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
+
+
+# ---------------------------------------------------------------------------
+# kernels edge cases
+# ---------------------------------------------------------------------------
+def test_kernels_chunk_boundaries():
+    """Totals straddling CHUNK exercise the blocked loops."""
+    for total in (kernels.CHUNK - 1, kernels.CHUNK, kernels.CHUNK + 1,
+                  2 * kernels.CHUNK + 5):
+        rng = np.random.default_rng(total)
+        pairs = [(FlatParams.from_arrays(
+            [rng.normal(size=total).astype(np.float32)]), 1.0 + i)
+            for i in range(3)]
+        layout = pairs[0][0].layout
+        got = kernels.weighted_mean(pairs, layout).math_view()
+        W = sum(w for _, w in pairs)
+        want = sum((np.float64(w / W) * p.math_view().astype(np.float64)
+                    for p, w in pairs), np.zeros(total))
+        np.testing.assert_array_equal(got, want.astype(np.float32))
+
+
+def test_krum_gram_distances_match_direct():
+    rng = np.random.default_rng(2)
+    flats = [FlatParams.from_arrays([rng.normal(size=1000)
+                                     .astype(np.float32)]) for _ in range(5)]
+    D = kernels.krum_distances(flats, flats[0].layout)
+    X = np.stack([f.to_f64() for f in flats])
+    for i in range(5):
+        for j in range(5):
+            want = float(np.sum((X[i] - X[j]) ** 2))
+            assert abs(D[i, j] - want) <= 1e-6 * max(want, 1.0)
+
+
+def test_krum_gram_survives_large_common_offset():
+    """Late-round regime: updates share a huge common component and differ
+    by tiny per-client deltas. The naive ||a||²+||b||²−2<a,b> expansion
+    cancels catastrophically; the centered tiles must not."""
+    rng = np.random.default_rng(3)
+    base = rng.normal(0, 1e5, size=4096)
+    flats = [FlatParams.from_arrays(
+        [(base + rng.normal(0, 1e-3, size=4096)).astype(np.float64)])
+        for _ in range(5)]
+    D = kernels.krum_distances(flats, flats[0].layout)
+    X = np.stack([f.to_f64() for f in flats])
+    for i in range(5):
+        for j in range(i + 1, 5):
+            want = float(np.sum((X[i] - X[j]) ** 2))
+            assert abs(D[i, j] - want) <= 1e-6 * want, (i, j, D[i, j], want)
+
+
+def test_secagg_masked_share_bitwise_matches_seed_algorithm():
+    """Wire compat: masked shares must equal what the seed per-leaf
+    implementation produces, or mixed-version fleets' masks stop
+    cancelling mod 2^64."""
+    from repro.fl.mods import _prg_mask, quantize, SecAggMod
+    from repro.fl.messages import (TaskIns, decode_task_res, encode_fit_ins,
+                                   encode_task_ins)
+    from repro.fl.client import ClientApp, NumPyClient
+
+    rng = np.random.default_rng(9)
+    arrays = [rng.normal(size=(5, 3)).astype(np.float32),
+              rng.normal(size=(7,)).astype(np.float32)]
+
+    class _Echo(NumPyClient):
+        def fit(self, parameters, config):
+            return parameters, 10, {}
+
+    mod = SecAggMod(site="a", peers=["a", "b"],
+                    pairwise_seed_fn=lambda x, y: 1234)
+    app = ClientApp(lambda cid: _Echo().to_client(), mods=[mod])
+    t = TaskIns("fit", 2, encode_fit_ins(FitIns(arrays, {})), task_id="t")
+    got = decode_fit_res(decode_task_res(app.handle(encode_task_ins(t)))
+                         .payload).parameters
+    # seed algorithm: per-leaf quantize + per-leaf spawn_key=(round, leaf)
+    for leaf, a in enumerate(arrays):
+        q = quantize(np.asarray(a, np.float64) * 10.0)
+        q = q + _prg_mask(1234, 2, leaf, q.shape, positive=True)
+        np.testing.assert_array_equal(got[leaf], q)
+
+
+# ---------------------------------------------------------------------------
+# batched metric streaming (satellite)
+# ---------------------------------------------------------------------------
+def test_metric_batch_encode_decode():
+    from repro.runtime.streaming import (_BATCH_MAGIC, _decode_batch,
+                                         _encode, _encode_batch)
+
+    items = [("site-1/loss", 0.25, 3), ("site-1/acc", 0.9, 3),
+             ("site-1/lr", 1e-3, 3)]
+    b = _encode_batch(items)
+    assert b[0] == _BATCH_MAGIC
+    assert _decode_batch(b) == items
+    # legacy single-scalar frames must never collide with the magic
+    assert _encode("site-1/loss", 0.25, 3)[0] != _BATCH_MAGIC
+
+
+def test_metric_collector_accepts_batches():
+    from repro.runtime.streaming import MetricCollector, _encode_batch
+
+    class _Msg:
+        def __init__(self, payload):
+            self.payload = payload
+
+    mc = MetricCollector()
+    mc.on_event(_Msg(_encode_batch([("s/a", 1.0, 0), ("s/b", 2.0, 0)])))
+    mc.on_event(_Msg(_encode_batch([("s/a", 3.0, 1)])))
+    assert mc.tags() == ["s/a", "s/b"]
+    assert mc.series("s/a") == [(0, 1.0), (1, 3.0)]

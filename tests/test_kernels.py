@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
@@ -40,6 +43,27 @@ def test_flash_attention_matches_ref(B, S, H, KV, hd, window, causal, dtype):
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32),
                                rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("S,causal", [(509, True), (509, False), (127, True),
+                                      (33, True)])
+def test_flash_attention_prime_seq_len(S, causal):
+    """Regression: prime/odd S must not degrade the block size to 1 (the
+    old `while S % block_q: block_q -= 1` loop); the kernel now pads the
+    sequence to a multiple of an aligned block and masks the tail."""
+    from repro.kernels.flash_attention import _choose_block
+
+    assert _choose_block(509, 64) == 64        # pads, never collapses to 1
+    assert _choose_block(80, 32) == 16         # largest aligned divisor
+    assert _choose_block(128, 512) == 128      # short seqs use one block
+    B, H, KV, hd = 1, 2, 2, 16
+    q = jnp.asarray(RNG.normal(size=(B, S, H, hd)), jnp.float32) / 4
+    k = jnp.asarray(RNG.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(B, S, KV, hd)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_kv=64)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("bq,bkv", [(16, 16), (32, 64), (64, 32), (128, 128)])

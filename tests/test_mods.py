@@ -1,7 +1,10 @@
 """Client mods: DP clipping/noise, SecAgg exactness, Top-K compression."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import run_native
 from repro.fl import (DPMod, FedAvg, SecAggFedAvg, SecAggMod, ServerApp,

@@ -3,7 +3,10 @@ import threading
 import time
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.runtime.reliable import ReliableMessenger, RequestTimeout
 from repro.runtime.transport import FaultSpec, Message, Network

@@ -1,7 +1,10 @@
 """FL strategy unit tests + robustness properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.fl.messages import FitRes
 from repro.fl.strategy import (FedAdam, FedAvg, FedAvgM, FedMedian, FedProx,
