@@ -12,6 +12,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
   agg_throughput_*       flat-buffer aggregation engine: decode+FedAvg MB/s
                          across model sizes x client counts, vs the legacy
                          per-layer path (derived = speedup + equivalence)
+  straggler_overlap_*    arrival-order streaming driver: round wall-clock
+                         with one straggler (~max client time) or one dead
+                         node (~shared deadline, NOT n x timeout; the node
+                         lands in failures, the round completes)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -293,6 +297,86 @@ def bench_agg_throughput(quick=False):
             print(f"agg_throughput_{label}_{n_clients}clients,0,skipped=oom")
 
 
+def _straggler_case(n_clients, delta, timeout, dead=False, rounds=2):
+    """Round wall-clock with one straggler (delayed by ``delta``) or one
+    dead node among ``n_clients``, through the arrival-order streaming
+    driver.  Returns (seconds_per_round, failures_per_round)."""
+    import threading
+
+    from repro.core.superlink import (NativeConnection, SuperLink,
+                                      SuperLinkDriver, SuperNode)
+    from repro.fl import ClientApp, FedAvg, NumPyClient, ServerApp, \
+        ServerConfig
+
+    shape = (250_000,)                      # ~1 MB fp32 model
+
+    class C(NumPyClient):
+        def __init__(self, v, delay=0.0, dead_ev=None):
+            self.v, self.delay, self.dead_ev = float(v), delay, dead_ev
+
+        def fit(self, parameters, config):
+            if self.dead_ev is not None:
+                self.dead_ev.wait()
+            if self.delay:
+                time.sleep(self.delay)
+            return [np.full(shape, self.v, np.float32)], 10, {}
+
+    class NoEval(FedAvg):
+        def configure_evaluate(self, rnd, parameters, nodes):
+            return {}
+
+    dead_ev = threading.Event() if dead else None
+    link = SuperLink()
+    nodes = []
+    for i in range(n_clients):
+        straggler = i == n_clients - 1
+        c = C(i + 1, delay=delta if straggler and not dead else 0.0,
+              dead_ev=dead_ev if straggler and dead else None)
+        nodes.append(SuperNode(f"site-{i}",
+                               ClientApp(lambda cid, c=c: c.to_client()),
+                               NativeConnection(link)))
+    for n in nodes:
+        n.start()
+    try:
+        app = ServerApp(ServerConfig(num_rounds=rounds,
+                                     round_timeout=timeout),
+                        NoEval(initial_parameters=[np.zeros(shape,
+                                                            np.float32)]))
+        driver = SuperLinkDriver(link, expected_nodes=n_clients)
+        t0 = time.perf_counter()
+        h = app.run(driver)
+        dt = (time.perf_counter() - t0) / rounds
+    finally:
+        if dead_ev is not None:
+            dead_ev.set()
+        for n in nodes:
+            n.stop()
+    return dt, len(h.rounds[-1].failures)
+
+
+def bench_straggler_overlap(quick=False):
+    """Fault-tolerance trajectory: with one client delayed by delta the
+    round ends at ~max(client time) (decode+accumulate overlaps the
+    straggler, nobody waits out the deadline); with one dead client the
+    round ends at the SHARED deadline (not n_clients x timeout) and the
+    node lands in failures instead of aborting the round."""
+    delta, timeout = (0.3, 1.0) if quick else (0.5, 1.5)
+    sizes = [4] if quick else [4, 16]
+    for n in sizes:
+        dt, nfail = _straggler_case(n, delta, timeout=10.0, dead=False)
+        print(f"straggler_overlap_{n}clients,{dt*1e6:.0f},"
+              f"delta_ms={delta*1e3:.0f};round_over_delta={dt/delta:.2f}x;"
+              f"failures={nfail}")
+        dt, nfail = _straggler_case(n, delta, timeout=timeout, dead=True)
+        # legacy driver: the dead node's pull burned ~1x timeout then the
+        # TimeoutError ABORTED the run (and up to n x timeout with every
+        # node dead); now the round completes at the shared deadline
+        print(f"straggler_deadnode_{n}clients,{dt*1e6:.0f},"
+              f"timeout_ms={timeout*1e3:.0f};"
+              f"round_over_timeout={dt/timeout:.2f}x;"
+              f"legacy_behavior=abort;failures={nfail}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -306,6 +390,7 @@ def main() -> None:
     bench_secagg(args.quick)
     bench_kernels(args.quick)
     bench_agg_throughput(args.quick)
+    bench_straggler_overlap(args.quick)
     if not ok:
         print("ERROR: fig5 reproducibility failed", file=sys.stderr)
         sys.exit(1)

@@ -10,6 +10,7 @@ import msgpack
 
 from repro.core.superlink import SuperLink
 from repro.runtime.ccp import JobContext
+from repro.runtime.reliable import RequestTimeout
 from repro.runtime.transport import Message
 
 
@@ -24,4 +25,9 @@ class LGC:
             resp = self.link.fleet_unary(d["m"], d["q"])
             return msgpack.packb({"r": resp, "e": ""}, use_bin_type=True)
         except Exception as e:  # noqa: BLE001
-            return msgpack.packb({"r": b"", "e": repr(e)}, use_bin_type=True)
+            # tag the error kind so the LGS can demote timeouts to a
+            # retryable RequestTimeout instead of a fatal RuntimeError
+            kind = ("timeout" if isinstance(e, (TimeoutError, RequestTimeout))
+                    else "error")
+            return msgpack.packb({"r": b"", "e": repr(e), "k": kind},
+                                 use_bin_type=True)

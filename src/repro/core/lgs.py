@@ -17,6 +17,7 @@ import msgpack
 
 from repro.core.superlink import FleetConnection
 from repro.runtime.ccp import JobContext
+from repro.runtime.reliable import RequestTimeout
 
 
 class LGSConnection(FleetConnection):
@@ -26,9 +27,14 @@ class LGSConnection(FleetConnection):
     def unary(self, method: str, request: bytes) -> bytes:
         payload = msgpack.packb({"m": method, "q": request}, use_bin_type=True)
         # hop 1: SuperNode -> LGS (this call); hops 2-3: FLARE client ->
-        # FLARE server (reliable, SCP-relayed) -> LGC
+        # FLARE server (reliable, SCP-relayed) -> LGC.  A ReliableMessage
+        # RequestTimeout propagates as-is: the SuperNode treats it as
+        # retryable and the server's round deadline records the miss as a
+        # per-node failure — the round itself never aborts.
         resp = self.ctx.request("server", "flower/unary", payload)
         d = msgpack.unpackb(resp, raw=False)
         if d.get("e"):
+            if d.get("k") == "timeout":
+                raise RequestTimeout(f"LGC timeout: {d['e']}")
             raise RuntimeError(f"LGC error: {d['e']}")
         return d["r"]

@@ -8,31 +8,54 @@ connection can be the in-process :class:`NativeConnection` *or* the
 FLARE-routed LGS/LGC pair — with identical semantics (Fig. 5 claim).
 
 Fleet methods:   register, pull_task_ins, push_task_res
+
+Timeout semantics (the fault-tolerance contract):
+
+- The result store is a **completion queue**: :meth:`SuperLink.pull_any`
+  blocks on the shared condition variable until *any* of a set of tasks
+  completes, so one slow node never serializes the others behind it.
+- All pulls of a round share **one deadline**.  When it passes, the
+  un-arrived tasks are :meth:`discard`-ed: never-delivered TaskIns are
+  dropped from the node queues, in-flight tasks leave a tombstone so a
+  late TaskRes is silently dropped instead of leaking into (and possibly
+  corrupting) a later round.
+- :class:`SuperNode` treats transport errors (e.g. a ReliableMessage
+  :class:`~repro.runtime.reliable.RequestTimeout` on the FLARE-bridged
+  path) as retryable: the node keeps serving and the *server's* per-round
+  deadline demotes the miss to a per-node failure.
 """
 from __future__ import annotations
 
-import itertools
-import queue
 import threading
 import time
 import uuid
-from typing import Callable, Dict, List, Optional, Tuple
+from collections import deque
+from typing import Deque, Dict, Iterable, Iterator, List, Optional, Set, Tuple
 
 import msgpack
 
 from repro.fl.client import ClientApp
+from repro.fl.messages import TaskRes, encode_task_res
 from repro.fl.server import Driver
+from repro.runtime.reliable import RequestTimeout
+
+# Tombstones for in-flight tasks whose round already gave up on them are
+# pruned after this many seconds; a responsive-but-slow node clears its own
+# tombstone the moment its late result arrives (and is dropped).
+_TOMBSTONE_TTL = 120.0
 
 
 class SuperLink:
-    """Hub: per-node task queues + result store. Thread-safe."""
+    """Hub: per-node task queues + completion queue. Thread-safe."""
 
     def __init__(self):
-        self._task_queues: Dict[str, "queue.Queue[Tuple[str, bytes]]"] = {}
+        self._task_queues: Dict[str, Deque[Tuple[str, bytes]]] = {}
         self._results: Dict[str, bytes] = {}
+        self._expired: Dict[str, float] = {}   # task_id -> discard time
         self._results_cv = threading.Condition()
         self._nodes: Dict[str, float] = {}
         self._lock = threading.Lock()
+        self.stats = {"late_dropped": 0, "discarded_ins": 0}
 
     # ------------------------------------------------------------ fleet API
     def fleet_unary(self, method: str, request: bytes) -> bytes:
@@ -40,21 +63,24 @@ class SuperLink:
             node_id = request.decode()
             with self._lock:
                 self._nodes[node_id] = time.time()
-                self._task_queues.setdefault(node_id, queue.Queue())
+                self._task_queues.setdefault(node_id, deque())
             return b"OK"
         if method == "pull_task_ins":
             node_id = request.decode()
             with self._lock:
-                q = self._task_queues.setdefault(node_id, queue.Queue())
-            try:
-                task_id, task = q.get_nowait()
-                return msgpack.packb({"id": task_id, "task": task},
-                                     use_bin_type=True)
-            except queue.Empty:
-                return msgpack.packb({"id": "", "task": b""}, use_bin_type=True)
+                q = self._task_queues.setdefault(node_id, deque())
+                task_id, task = q.popleft() if q else ("", b"")
+            return msgpack.packb({"id": task_id, "task": task},
+                                 use_bin_type=True)
         if method == "push_task_res":
             d = msgpack.unpackb(request, raw=False)
             with self._results_cv:
+                if d["id"] in self._expired:
+                    # round already gave up on this task: drop the late
+                    # result so it cannot leak into a later round
+                    del self._expired[d["id"]]
+                    self.stats["late_dropped"] += 1
+                    return b"LATE"
                 self._results[d["id"]] = d["res"]
                 self._results_cv.notify_all()
             return b"OK"
@@ -68,23 +94,71 @@ class SuperLink:
     def push_task_ins(self, node_id: str, task: bytes) -> str:
         task_id = uuid.uuid4().hex
         with self._lock:
-            q = self._task_queues.setdefault(node_id, queue.Queue())
-        q.put((task_id, task))
+            self._task_queues.setdefault(node_id, deque()).append(
+                (task_id, task))
         return task_id
 
-    def pull_task_res(self, task_id: str, timeout: float) -> bytes:
-        deadline = time.monotonic() + timeout
+    def pull_any(self, task_ids: Iterable[str],
+                 deadline: float) -> Optional[Tuple[str, bytes]]:
+        """Completion queue: block until any of ``task_ids`` has a result
+        or ``deadline`` (``time.monotonic()`` timestamp) passes.
+
+        Returns ``(task_id, res_bytes)`` — the result is popped — or
+        ``None`` on deadline.  The caller owns the remaining ids and must
+        eventually :meth:`discard` the ones it gives up on.
+        """
+        ids = list(task_ids)
         with self._results_cv:
-            while task_id not in self._results:
+            while True:
+                for tid in ids:
+                    if tid in self._results:
+                        return tid, self._results.pop(tid)
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    raise TimeoutError(f"task {task_id} timed out")
+                    return None
                 self._results_cv.wait(min(remaining, 0.1))
-            return self._results.pop(task_id)
+
+    def pull_task_res(self, task_id: str, timeout: float) -> bytes:
+        got = self.pull_any([task_id], time.monotonic() + timeout)
+        if got is None:
+            self.discard([task_id])
+            raise TimeoutError(f"task {task_id} timed out")
+        return got[1]
+
+    def discard(self, task_ids: Iterable[str]) -> None:
+        """Give up on tasks: reap undelivered TaskIns from the node queues
+        and tombstone in-flight ones so their late TaskRes is dropped."""
+        ids = set(task_ids)
+        if not ids:
+            return
+        undelivered: Set[str] = set()
+        with self._lock:
+            for node, q in self._task_queues.items():
+                if any(tid in ids for tid, _ in q):
+                    kept = deque(e for e in q if e[0] not in ids)
+                    undelivered.update(tid for tid, _ in q if tid in ids)
+                    self._task_queues[node] = kept
+        self.stats["discarded_ins"] += len(undelivered)
+        now = time.monotonic()
+        with self._results_cv:
+            for tid in ids:
+                if self._results.pop(tid, None) is not None:
+                    continue                     # landed but unwanted: done
+                if tid not in undelivered:
+                    self._expired[tid] = now     # delivered, still in flight
+            cutoff = now - _TOMBSTONE_TTL
+            for tid in [t for t, ts in self._expired.items() if ts < cutoff]:
+                del self._expired[tid]
 
 
 class SuperLinkDriver(Driver):
-    """Driver API implementation over a SuperLink instance."""
+    """Driver API implementation over a SuperLink instance.
+
+    ``send_and_receive_iter`` is a **native streaming transport**: results
+    yield in arrival order the moment they land on the completion queue,
+    so decode+accumulate overlaps the stragglers' compute, and the whole
+    batch shares a single deadline.
+    """
 
     def __init__(self, superlink: SuperLink, expected_nodes: int = 0,
                  join_timeout: float = 30.0):
@@ -98,12 +172,36 @@ class SuperLinkDriver(Driver):
     def node_ids(self) -> List[str]:
         return self.link.node_ids()
 
+    def send_and_receive_iter(self, tasks: Dict[str, bytes],
+                              timeout: float) -> Iterator[Tuple[str, bytes]]:
+        ids = {self.link.push_task_ins(node, t): node
+               for node, t in sorted(tasks.items())}
+        deadline = time.monotonic() + timeout
+        pending = set(ids)
+        try:
+            while pending:
+                got = self.link.pull_any(pending, deadline)
+                if got is None:
+                    break                      # deadline: pending are lost
+                tid, res = got
+                pending.discard(tid)
+                yield ids[tid], res
+        finally:
+            # also runs on generator close: never strand orphaned state
+            if pending:
+                self.link.discard(pending)
+
     def send_and_receive(self, tasks: Dict[str, bytes],
                          timeout: float) -> Dict[str, bytes]:
-        ids = {node: self.link.push_task_ins(node, t)
-               for node, t in sorted(tasks.items())}
-        return {node: self.link.pull_task_res(tid, timeout)
-                for node, tid in ids.items()}
+        """Blocking batch API: all pulls share ONE deadline, so the total
+        wait is <= timeout (+ scheduling ε), never N x timeout."""
+        out = {node: res for node, res in
+               self.send_and_receive_iter(tasks, timeout)}
+        if len(out) < len(tasks):
+            missing = sorted(set(tasks) - set(out))
+            raise TimeoutError(
+                f"tasks for nodes {missing} timed out after {timeout}s")
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +225,13 @@ class NativeConnection(FleetConnection):
 
 
 class SuperNode:
-    """Long-running client host: polls for tasks, runs the ClientApp."""
+    """Long-running client host: polls for tasks, runs the ClientApp.
+
+    Transport failures (a dropped fleet call, a ReliableMessage timeout on
+    the FLARE-bridged path) do NOT kill the node: the loop records them in
+    ``transport_errors``, backs off briefly, and keeps serving — the
+    server's round deadline turns any miss into a per-node failure.
+    """
 
     def __init__(self, node_id: str, client_app: ClientApp,
                  connection: FleetConnection, poll_interval: float = 0.005):
@@ -135,6 +239,7 @@ class SuperNode:
         self.app = client_app
         self.conn = connection
         self.poll_interval = poll_interval
+        self.transport_errors = 0
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
@@ -146,15 +251,32 @@ class SuperNode:
 
     def _loop(self) -> None:
         while not self._stop.is_set():
-            resp = self.conn.unary("pull_task_ins", self.node_id.encode())
+            try:
+                resp = self.conn.unary("pull_task_ins", self.node_id.encode())
+            except (RequestTimeout, ConnectionError, OSError):
+                self.transport_errors += 1
+                self._stop.wait(10 * self.poll_interval)
+                continue
             d = msgpack.unpackb(resp, raw=False)
             if not d["id"]:
-                time.sleep(self.poll_interval)
+                self._stop.wait(self.poll_interval)
                 continue
-            res = self.app.handle(d["task"], cid=self.node_id)
-            self.conn.unary("push_task_res",
-                            msgpack.packb({"id": d["id"], "res": res},
-                                          use_bin_type=True))
+            try:
+                res = self.app.handle(d["task"], cid=self.node_id)
+            except Exception as e:  # noqa: BLE001 — mod/decode blew up
+                # outside ClientApp.handle's own guard: report the real
+                # error instead of dying and ghosting as (node, "timeout")
+                res = encode_task_res(TaskRes("error", 0, b"",
+                                              error=repr(e)))
+            try:
+                self.conn.unary("push_task_res",
+                                msgpack.packb({"id": d["id"], "res": res},
+                                              use_bin_type=True))
+            except (RequestTimeout, ConnectionError, OSError):
+                # undeliverable result: the server's deadline records the
+                # miss as (node, "timeout"); keep serving later rounds
+                self.transport_errors += 1
+                self._stop.wait(10 * self.poll_interval)
 
     def stop(self) -> None:
         self._stop.set()

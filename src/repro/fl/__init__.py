@@ -9,8 +9,9 @@ from repro.fl.flat import (  # noqa: F401
 from repro.fl.client import Client, ClientApp, NumPyClient  # noqa: F401
 from repro.fl.server import ServerApp, ServerConfig, Driver  # noqa: F401
 from repro.fl.strategy import (  # noqa: F401
-    Strategy, FitAccumulator, FedAvg, FedAdam, FedYogi, FedAvgM, FedProx,
-    FedMedian, FedTrimmedMean, Krum, make_strategy, weighted_average,
+    Strategy, FitAccumulator, QuorumNotMet, FedAvg, FedAdam, FedYogi,
+    FedAvgM, FedProx, FedMedian, FedTrimmedMean, Krum, make_strategy,
+    weighted_average,
 )
 from repro.fl.mods import (  # noqa: F401
     DPMod, SecAggMod, SecAggFedAvg, TopKCompressionMod,

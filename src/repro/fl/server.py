@@ -40,19 +40,33 @@ class Driver:
 
     def send_and_receive(self, tasks: Dict[str, bytes],
                          timeout: float) -> Dict[str, bytes]:
-        """node_id -> TaskIns bytes; returns node_id -> TaskRes bytes."""
+        """node_id -> TaskIns bytes; returns node_id -> TaskRes bytes.
+
+        All-or-nothing batch API: raises ``TimeoutError`` if any task
+        misses the (shared) deadline.  Callers that tolerate partial
+        participation use :meth:`send_and_receive_iter` instead.
+        """
         raise NotImplementedError
 
     def send_and_receive_iter(self, tasks: Dict[str, bytes], timeout: float):
         """Yield (node_id, TaskRes bytes) pairs as results become
         available, releasing each buffer to the consumer.
 
-        The default adapts the blocking API and yields in sorted node
-        order, which keeps aggregation deterministic; streaming transports
-        can override to yield in arrival order (the FedAvg-family
+        Streaming transports yield in **arrival order** and simply stop
+        yielding once the shared deadline passes — a straggler or dead
+        node means *fewer* pairs, never an exception.  The caller records
+        the missing nodes as per-node failures (the FedAvg-family
         accumulators are order-insensitive up to fp64 rounding).
+
+        The default adapts the blocking API and yields in sorted node
+        order, which keeps aggregation deterministic.  The blocking API is
+        all-or-nothing, so on timeout the adapter yields nothing and every
+        node is recorded as a failure — the contract holds either way.
         """
-        res = self.send_and_receive(tasks, timeout)
+        try:
+            res = self.send_and_receive(tasks, timeout)
+        except TimeoutError:
+            return
         for node in sorted(res):
             yield node, res.pop(node)
 
@@ -62,6 +76,9 @@ class RoundRecord:
     round: int
     loss: Optional[float] = None
     metrics: Dict[str, Any] = field(default_factory=dict)
+    # (node_id, reason) for every node that errored or missed the deadline
+    # in this round (fit and evaluate phases combined)
+    failures: List[Tuple[str, str]] = field(default_factory=list)
 
 
 @dataclass
@@ -78,6 +95,29 @@ class ServerApp:
         self.config = config
         self.strategy = strategy
 
+    @staticmethod
+    def _exchange(driver: Driver, tasks: Dict[str, bytes], timeout: float,
+                  on_result) -> List[Tuple[str, str]]:
+        """Stream one round-trip: decode each TaskRes as it arrives and
+        hand successes to ``on_result(node, task_res)``; return the
+        failures — errored responses plus a ``(node, "timeout")`` entry
+        for every node that missed the shared deadline."""
+        failures: List[Tuple[str, str]] = []
+        received = set()
+        for node, tr_bytes in driver.send_and_receive_iter(tasks, timeout):
+            received.add(node)
+            try:
+                tr = decode_task_res(tr_bytes)
+                if tr.error:
+                    failures.append((node, tr.error))
+                else:
+                    on_result(node, tr)
+            except Exception as e:  # noqa: BLE001 — byzantine/buggy payload
+                failures.append((node, f"malformed response: {e!r}"))
+        for node in sorted(set(tasks) - received):
+            failures.append((node, "timeout"))
+        return failures
+
     # ------------------------------------------------------------- rounds
     def run(self, driver: Driver) -> History:
         history = History()
@@ -85,17 +125,41 @@ class ServerApp:
         if not nodes:
             raise RuntimeError("no connected nodes")
 
-        # round 0: pull initial parameters from the first node if the
-        # strategy does not provide them
+        # round 0: pull initial parameters if the strategy does not provide
+        # them — probed in small waves, each under ONE shared deadline and
+        # first success wins, so dead nodes neither abort the run nor stack
+        # up per-node timeouts, and a large fleet doesn't upload N models.
+        # (On a blocking-only driver each wave is all-or-nothing: a dead
+        # node costs its whole wave, and the next wave is probed instead.)
         parameters = self.strategy.initialize_parameters()
         if parameters is None:
-            t = TaskIns("get_parameters", 0, b"", task_id=uuid.uuid4().hex)
-            res = driver.send_and_receive(
-                {nodes[0]: encode_task_ins(t)}, self.config.round_timeout)
-            task_res = decode_task_res(res[nodes[0]])
-            if task_res.error:
-                raise RuntimeError(task_res.error)
-            parameters = bytes_to_arrays(task_res.payload)
+            errors: List[Tuple[str, str]] = []
+            for lo in range(0, len(nodes), 3):
+                wave = nodes[lo:lo + 3]
+                tasks = {node: encode_task_ins(TaskIns(
+                    "get_parameters", 0, b"", task_id=uuid.uuid4().hex))
+                    for node in wave}
+                received = set()
+                for node, tr_bytes in driver.send_and_receive_iter(
+                        tasks, self.config.round_timeout):
+                    received.add(node)
+                    try:
+                        tr = decode_task_res(tr_bytes)
+                        if tr.error:
+                            errors.append((node, tr.error))
+                            continue
+                        parameters = bytes_to_arrays(tr.payload)
+                    except Exception as e:  # noqa: BLE001 — bad payload
+                        errors.append((node, f"malformed response: {e!r}"))
+                        continue
+                    break                # closing the iter reaps the rest
+                if parameters is not None:
+                    break
+                errors.extend((n, "timeout") for n in wave
+                              if n not in received)
+            if parameters is None:
+                raise RuntimeError(
+                    f"no node returned initial parameters: {errors}")
 
         for rnd in range(1, self.config.num_rounds + 1):
             # ---- fit phase ----------------------------------------------
@@ -108,35 +172,33 @@ class ServerApp:
             # results fold into the strategy's accumulator as they arrive
             # (zero-copy flat views / streaming sums — no per-layer stacking)
             acc = self.strategy.fit_accumulator(rnd, parameters)
-            failures: List[Tuple[str, str]] = []
-            for node, tr_bytes in driver.send_and_receive_iter(
-                    tasks, self.config.round_timeout):
-                tr = decode_task_res(tr_bytes)
-                if tr.error:
-                    failures.append((node, tr.error))
-                else:
-                    acc.add(node, decode_fit_res(tr.payload))
+            # stragglers / dead nodes: recorded failures, not round-aborting
+            failures = self._exchange(
+                driver, tasks, self.config.round_timeout,
+                lambda node, tr: acc.add(node, decode_fit_res(tr.payload)))
             parameters, agg_metrics = acc.finalize(failures)
 
             # ---- evaluate phase ------------------------------------------
             ev_cfg = self.strategy.configure_evaluate(rnd, parameters, nodes)
-            record = RoundRecord(rnd, metrics=dict(agg_metrics))
+            record = RoundRecord(rnd, metrics=dict(agg_metrics),
+                                 failures=list(failures))
             if ev_cfg:
                 tasks = {}
                 for node, ins in ev_cfg.items():
                     t = TaskIns("evaluate", rnd, encode_evaluate_ins(ins),
                                 task_id=uuid.uuid4().hex)
                     tasks[node] = encode_task_ins(t)
-                res = driver.send_and_receive(tasks, self.config.round_timeout)
                 ev_results: List[Tuple[str, EvaluateRes]] = []
-                for node in sorted(res):
-                    tr = decode_task_res(res[node])
-                    if not tr.error:
-                        ev_results.append((node, decode_evaluate_res(tr.payload)))
+                ev_failures = self._exchange(
+                    driver, tasks, self.config.round_timeout,
+                    lambda node, tr: ev_results.append(
+                        (node, decode_evaluate_res(tr.payload))))
+                ev_results.sort()          # arrival order -> deterministic
                 loss, ev_metrics = self.strategy.aggregate_evaluate(
-                    rnd, ev_results, [])
+                    rnd, ev_results, ev_failures)
                 record.loss = loss
                 record.metrics.update(ev_metrics)
+                record.failures.extend(ev_failures)
             history.rounds.append(record)
 
         history.final_parameters = parameters

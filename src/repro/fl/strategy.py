@@ -38,10 +38,31 @@ from repro.fl.messages import EvaluateIns, EvaluateRes, FitIns, FitRes
 NDArrays = List[np.ndarray]
 
 
+class QuorumNotMet(RuntimeError):
+    """Raised at finalize when fewer successful results arrived than the
+    strategy's failure-tolerance knob (``min_available`` /
+    ``min_fit_clients``) allows.  Stragglers and dead nodes land in
+    ``failures`` and the round continues — unless the quorum breaks."""
+
+
 def _flat_of(res: FitRes) -> FlatParams:
     """The FitRes's zero-copy flat view, packing only if it has none."""
     return res.flat if res.flat is not None else \
         FlatParams.from_arrays(res.parameters)
+
+
+def _check_shapes(fp: FlatParams, current: NDArrays, node: str) -> None:
+    """Reject a result whose tensor shapes don't match the global model.
+
+    Raised at ``add`` time so the ServerApp demotes the byzantine/buggy
+    node to a per-node failure instead of crashing in the aggregation
+    kernel at finalize (deferred kernels would otherwise surface the
+    mismatch rounds of work later, aborting the run)."""
+    got = [tuple(leaf.shape) for leaf in fp.layout.leaves]
+    want = [tuple(a.shape) for a in current]
+    if got != want:
+        raise ValueError(
+            f"node {node}: result shapes {got} != model shapes {want}")
 
 
 def weighted_average(results: List[Tuple[NDArrays, float]]) -> NDArrays:
@@ -72,6 +93,9 @@ class FitAccumulator:
 
     def finalize(self, failures: List[Tuple[str, str]]
                  ) -> Tuple[NDArrays, Dict[str, Any]]:
+        # results may have streamed in arrival order; canonicalize so the
+        # aggregate is independent of who finished first (bitwise repro)
+        self.results.sort(key=lambda nr: nr[0])
         return self.strategy.aggregate_fit(self.rnd, self.results, failures,
                                            self.current)
 
@@ -132,32 +156,40 @@ class _WeightedFitAcc(FitAccumulator):
 
     def __init__(self, strategy: "FedAvg", rnd: int, current: NDArrays):
         super().__init__(strategy, rnd, current)
-        self.pairs: List[Tuple[FlatParams, float]] = []
+        self.pairs: List[Tuple[str, FlatParams, float]] = []
         self._streaming: Optional[kernels.StreamingWeightedSum] = None
         self._count = 0
 
     def add(self, node: str, res: FitRes) -> None:
         fp = _flat_of(res)
+        _check_shapes(fp, self.current, node)
         w = float(res.num_examples)
-        self._count += 1
         if self.strategy.low_memory:
+            # fold on arrival: order-dependent by <=1 ULP of the fp64
+            # accumulator (invisible after the fp32 cast) — documented
+            # trade for O(1)-model-size peak memory
             if self._streaming is None:
                 self._streaming = kernels.StreamingWeightedSum(fp.layout)
             self._streaming.add(fp, w)      # payload is droppable after this
         else:
-            self.pairs.append((fp, w))
+            self.pairs.append((node, fp, w))
+        self._count += 1        # only after the fold/append succeeded
 
     def finalize(self, failures: List[Tuple[str, str]]
                  ) -> Tuple[NDArrays, Dict[str, Any]]:
         st = self.strategy
-        if self._count < st.min_fit_clients:
-            raise RuntimeError(
-                f"round {self.rnd}: {self._count} results < min "
-                f"{st.min_fit_clients} (failures: {failures})")
+        need = st.quorum()
+        if self._count < need:
+            raise QuorumNotMet(
+                f"round {self.rnd}: {self._count} results < quorum "
+                f"{need} (failures: {failures})")
         if self._streaming is not None:
             target = self._streaming.finalize()
         else:
-            target = kernels.weighted_mean(self.pairs, self.pairs[0][0].layout)
+            # canonical node order -> aggregate independent of arrival order
+            self.pairs.sort(key=lambda p: p[0])
+            pairs = [(fp, w) for _, fp, w in self.pairs]
+            target = kernels.weighted_mean(pairs, pairs[0][0].layout)
         metrics = {"num_clients": self._count}
         return st._server_opt(self.rnd, target, self.current), metrics
 
@@ -166,7 +198,17 @@ class _WeightedFitAcc(FitAccumulator):
 class FedAvg(Strategy):
     initial_parameters: Optional[NDArrays] = None
     min_fit_clients: int = 1
+    # failure-tolerance knob: how many *successful* results a round needs
+    # before finalize may aggregate; the effective quorum is
+    # max(min_fit_clients, min_available) (min_fit_clients is the seed
+    # API, kept for compatibility).  Robust aggregators set min_available
+    # to insist on a quorum — their byzantine tolerance assumes a minimum
+    # population (Krum additionally floors it at 2f+3).
+    min_available: int = 0
     low_memory: bool = False
+
+    def quorum(self) -> int:
+        return max(self.min_fit_clients, self.min_available, 1)
 
     def initialize_parameters(self):
         return self.initial_parameters
@@ -272,16 +314,26 @@ class _StackedFitAcc(FitAccumulator):
 
     def __init__(self, strategy, rnd, current):
         super().__init__(strategy, rnd, current)
-        self.flats: List[FlatParams] = []
-        self.weights: List[float] = []
+        self.entries: List[Tuple[str, FlatParams, float]] = []
 
     def add(self, node, res):
-        self.flats.append(_flat_of(res))
-        self.weights.append(float(res.num_examples))
+        fp = _flat_of(res)
+        _check_shapes(fp, self.current, node)
+        self.entries.append((node, fp, float(res.num_examples)))
 
     def finalize(self, failures):
-        return self.strategy._aggregate_flats(self.rnd, self.flats,
-                                              self.weights, failures)
+        need = self.strategy.quorum()
+        if len(self.entries) < need:
+            raise QuorumNotMet(
+                f"round {self.rnd}: {len(self.entries)} results < quorum "
+                f"{need} (failures: {failures})")
+        # canonical node order -> aggregate independent of arrival order
+        self.entries.sort(key=lambda e: e[0])
+        nodes = [n for n, _, _ in self.entries]
+        flats = [fp for _, fp, _ in self.entries]
+        weights = [w for _, _, w in self.entries]
+        return self.strategy._aggregate_flats(self.rnd, flats, weights,
+                                              failures, nodes)
 
 
 class _StackedStrategyMixin:
@@ -297,7 +349,7 @@ class _StackedStrategyMixin:
 
 @dataclass
 class FedMedian(_StackedStrategyMixin, FedAvg):
-    def _aggregate_flats(self, rnd, flats, weights, failures):
+    def _aggregate_flats(self, rnd, flats, weights, failures, nodes=None):
         out = kernels.median(flats, flats[0].layout)
         return out.to_arrays(), {"num_clients": len(flats)}
 
@@ -306,7 +358,7 @@ class FedMedian(_StackedStrategyMixin, FedAvg):
 class FedTrimmedMean(_StackedStrategyMixin, FedAvg):
     beta: float = 0.2      # fraction trimmed at each end
 
-    def _aggregate_flats(self, rnd, flats, weights, failures):
+    def _aggregate_flats(self, rnd, flats, weights, failures, nodes=None):
         k = int(self.beta * len(flats))
         out = kernels.trimmed_mean(flats, flats[0].layout, k)
         return out.to_arrays(), {"num_clients": len(flats),
@@ -321,14 +373,25 @@ class Krum(_StackedStrategyMixin, FedAvg):
     num_byzantine: int = 0
     num_selected: int = 1
 
-    def _aggregate_flats(self, rnd, flats, weights, failures):
+    def quorum(self) -> int:
+        # Krum's tolerance of f byzantine clients assumes n >= 2f + 3
+        # (Blanchard et al. 2017).  Under partial participation the round
+        # must abort (QuorumNotMet) rather than silently clamp f and let a
+        # byzantine survivor be selected.
+        floor = 2 * self.num_byzantine + 3 if self.num_byzantine else 1
+        return max(super().quorum(), floor)
+
+    def _aggregate_flats(self, rnd, flats, weights, failures, nodes=None):
         layout = flats[0].layout
         D = kernels.krum_distances(flats, layout)
         scores = kernels.krum_scores(D, self.num_byzantine)
         chosen = np.argsort(scores)[: max(self.num_selected, 1)]
         sel = [(flats[i], weights[i]) for i in chosen]
         out = kernels.weighted_mean(sel, layout)
-        return out.to_arrays(), {"krum_selected": [int(c) for c in chosen]}
+        # report node ids, not positions: positions depend on arrival order
+        picked = ([nodes[i] for i in chosen] if nodes is not None
+                  else [int(c) for c in chosen])
+        return out.to_arrays(), {"krum_selected": picked}
 
 
 def make_strategy(name: str, **kw) -> Strategy:

@@ -22,7 +22,21 @@ from repro.runtime.transport import Message, Network
 
 
 class RequestTimeout(RuntimeError):
-    """Raised when a reliable exchange exceeds its deadline (=> job abort)."""
+    """Raised when a reliable exchange exceeds its deadline.
+
+    Carries the exchange coordinates so callers can *demote* the timeout
+    to a recorded per-node failure (the FL fault-tolerance contract)
+    instead of aborting the job — e.g. the SuperNode keeps serving and
+    the server logs ``(node, "timeout")`` for the round.
+    """
+
+    def __init__(self, message: str, *, target: Optional[str] = None,
+                 topic: Optional[str] = None,
+                 timeout: Optional[float] = None):
+        super().__init__(message)
+        self.target = target
+        self.topic = topic
+        self.timeout = timeout
 
 
 _PENDING = b"\x00__PENDING__"
@@ -33,16 +47,22 @@ class ReliableMessenger:
     """One per endpoint; handles both the requester and responder roles."""
 
     def __init__(self, network: Network, me: str,
-                 retry_interval: float = 0.02, default_timeout: float = 10.0):
+                 retry_interval: float = 0.02, default_timeout: float = 10.0,
+                 result_ttl: float = 60.0):
         self.net = network
         self.me = me
         self.retry_interval = retry_interval
         self.default_timeout = default_timeout
+        # how long a responder keeps a computed result for late QUERYs /
+        # duplicate REQs; afterwards the entry (and its dedup mark) is
+        # reaped so a long-lived endpoint's cache stays bounded
+        self.result_ttl = result_ttl
         self.inbox = network.register(me)
-        self._results: Dict[str, bytes] = {}          # responder: msg_id -> result
+        self._results: Dict[str, Tuple[float, bytes]] = {}   # responder cache
         self._inflight: Dict[str, threading.Event] = {}
         self._responses: Dict[str, bytes] = {}        # requester: msg_id -> resp
-        self._seen: Dict[str, bool] = {}              # responder dedup
+        self._seen: Dict[str, float] = {}             # responder dedup (ts)
+        self._executing: set = set()                  # handlers in flight
         self._handlers: Dict[str, Callable[[Message], bytes]] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -60,23 +80,52 @@ class ReliableMessenger:
         with self._lock:
             self._handlers[topic] = fn
 
+    def _reap_results(self) -> None:
+        """Drop cached result payloads past result_ttl; keep the (tiny)
+        dedup marks 10x longer.  Caller holds the lock.  A duplicate REQ
+        arriving after the payload is reaped but within the mark's
+        lifetime is still recognized as seen — the handler never
+        re-executes, the requester just times out (safe) instead of
+        triggering a second, possibly non-idempotent, execution."""
+        now = time.monotonic()
+        cutoff = now - self.result_ttl
+        for mid in [m for m, (ts, _) in self._results.items() if ts < cutoff]:
+            del self._results[mid]
+        mark_cutoff = now - 10 * self.result_ttl
+        for mid in [m for m, ts in self._seen.items()
+                    if isinstance(ts, float) and ts < mark_cutoff
+                    and m not in self._results
+                    and m not in self._executing]:
+            del self._seen[mid]
+
     def _handle_request(self, msg: Message) -> None:
         with self._lock:
             if msg.msg_id in self._seen:            # dedup: execute once
-                result = self._results.get(msg.msg_id)
-                if result is not None:              # re-push cached result
+                cached = self._results.get(msg.msg_id)
+                if cached is not None:              # re-push cached result
                     self._send(msg.msg_id, "RESP", msg.sender, msg.topic,
-                               result, attempt=msg.attempt)
+                               cached[1], attempt=msg.attempt)
                 return
             handler = self._match_handler(msg.topic)
             if handler is None:
                 # no handler *yet* (job process still starting): stay unseen
                 # so a retry executes once the handler is registered
                 return
-            self._seen[msg.msg_id] = True
-        result = handler(msg)                        # may take a while
+            self._seen[msg.msg_id] = time.monotonic()
+            # pin the mark while the handler runs: a long-running handler
+            # must not have its dedup mark reaped mid-flight (a retry REQ
+            # would then re-execute a non-idempotent operation)
+            self._executing.add(msg.msg_id)
+        try:
+            result = handler(msg)                    # may take a while
+        except BaseException:
+            with self._lock:
+                self._executing.discard(msg.msg_id)
+            raise
         with self._lock:
-            self._results[msg.msg_id] = result
+            self._results[msg.msg_id] = (time.monotonic(), result)
+            self._executing.discard(msg.msg_id)
+            self._reap_results()
         self._send(msg.msg_id, "RESP", msg.sender, msg.topic, result,
                    attempt=msg.attempt)
 
@@ -90,9 +139,10 @@ class ReliableMessenger:
 
     def _handle_query(self, msg: Message) -> None:
         with self._lock:
-            result = self._results.get(msg.msg_id)
+            cached = self._results.get(msg.msg_id)
+            self._reap_results()
         self._send(msg.msg_id, "RESP", msg.sender, msg.topic,
-                   result if result is not None else _PENDING,
+                   cached[1] if cached is not None else _PENDING,
                    attempt=msg.attempt)
 
     # ------------------------------------------------------------ requester
@@ -122,7 +172,9 @@ class ReliableMessenger:
                     break
             else:
                 raise RequestTimeout(
-                    f"{self.me} -> {target} [{topic}] timed out after {timeout}s")
+                    f"{self.me} -> {target} [{topic}] timed out after "
+                    f"{timeout}s", target=target, topic=topic,
+                    timeout=timeout)
             with self._lock:
                 return self._responses.pop(msg_id)
         finally:
@@ -138,10 +190,17 @@ class ReliableMessenger:
 
     # ------------------------------------------------------------ pump
     def _pump(self) -> None:
+        last_reap = time.monotonic()
         while not self._stop.is_set():
             try:
                 msg = self.inbox.get(timeout=0.05)
             except Exception:
+                # idle tick: reap even when no requests arrive, so an
+                # endpoint that goes quiet releases its cached payloads
+                if time.monotonic() - last_reap > 1.0:
+                    with self._lock:
+                        self._reap_results()
+                    last_reap = time.monotonic()
                 continue
             if msg.kind == "REQ":
                 # handlers run off-pump: a relaying handler (LGS/LGC) issues

@@ -205,7 +205,9 @@ def test_strategy_matches_legacy(name):
         want, m_old = old.aggregate_fit(rnd, results, [], cur_old)
         _assert_leaves_close(got, want, exact=exact)
         if name == "krum":
-            assert m_new["krum_selected"] == m_old["krum_selected"]
+            # new API reports node ids; legacy reports list positions
+            assert m_new["krum_selected"] == \
+                [results[i][0] for i in m_old["krum_selected"]]
         cur_new, cur_old = got, want
 
 

@@ -87,6 +87,38 @@ def test_handler_registered_late_still_serves():
     assert result.get("r") == b"served"
 
 
+def test_responder_cache_reaped_after_ttl():
+    """A long-lived responder must not grow its result cache forever:
+    payloads are reaped once result_ttl passes, while the (tiny) dedup
+    marks survive 10x longer so a straggling duplicate REQ can never
+    re-execute a non-idempotent handler."""
+    net = Network()
+    a = ReliableMessenger(net, "a", retry_interval=0.01)
+    b = ReliableMessenger(net, "b", retry_interval=0.01, result_ttl=0.15)
+    b.register_handler("w", lambda m: b"ok")
+    assert a.request("b", "w", b"1") == b"ok"
+    with b._lock:
+        assert len(b._results) == 1
+    time.sleep(0.3)
+    assert a.request("b", "w", b"2") == b"ok"   # insert triggers the reap
+    with b._lock:
+        assert len(b._results) == 1             # old payload reaped
+        assert len(b._seen) == 2                # dedup marks retained
+    time.sleep(1.6)                             # > 10 x result_ttl
+    assert a.request("b", "w", b"3") == b"ok"
+    with b._lock:
+        assert len(b._results) == 1 and len(b._seen) == 1
+    net.close()
+
+
+def test_timeout_carries_target_and_topic():
+    net, a, b = make_pair(timeout=0.2)
+    with pytest.raises(RequestTimeout) as ei:
+        a.request("b", "nope", b"", timeout=0.2)
+    assert ei.value.target == "b" and ei.value.topic == "nope"
+    assert ei.value.timeout == 0.2
+
+
 def test_bytes_only_boundary():
     net, a, b = make_pair()
     with pytest.raises(TypeError):
