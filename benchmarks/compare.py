@@ -1,0 +1,141 @@
+"""Benchmark-trajectory CI gate.
+
+Diffs a fresh ``BENCH_*.json`` snapshot (``benchmarks.run --quick --json``)
+against the committed ``benchmarks/BENCH_baseline.json`` and fails the job
+when the trajectory regresses:
+
+- any ``agg_throughput_*`` / ``quantized_agg_*`` row whose ``mbps`` or
+  ``speedup_vs_legacy`` drops more than ``--threshold`` (default 15%, env
+  ``BENCH_REGRESSION_THRESHOLD``) below the baseline;
+- a gated row (including ``wire_bytes_*`` / ``wire_codec_convergence``)
+  present and unskipped in the baseline but missing/skipped in the new
+  snapshot — a bench that starts crashing or OOMing must not silently
+  retire its own checks;
+- any correctness flag (``match`` / ``match_tol`` / ``bitwise_match`` /
+  ``within_tol``) that is not True in the new snapshot — equivalence is
+  part of the trajectory, a fast-but-wrong kernel must fail loudly;
+- ``wire_bytes_*`` rows whose payload ``reduction`` falls below the 3.5x
+  floor the quantized wire format promises.
+
+Timing rows that legitimately vary run to run (round wall-clock, straggler
+ratios) are NOT gated — only throughput/speedup of the aggregation engine
+and the invariant correctness flags.
+
+Run: python -m benchmarks.compare BENCH_new.json \
+        [--baseline benchmarks/BENCH_baseline.json] [--threshold 0.15]
+
+Exit code 0 = trajectory holds, 1 = regression (messages on stderr).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List
+
+#: rows gated against the baseline: throughput/speedup fields compared
+#: under the threshold, and the row itself must not vanish or go skipped
+#: (wire_bytes_* / wire_codec_convergence carry no gated numeric field,
+#: but losing them would silently drop the 3.5x-reduction and
+#: convergence checks below)
+GATED_PREFIXES = ("agg_throughput_", "quantized_agg_", "wire_bytes_",
+                  "wire_codec_convergence")
+#: higher-is-better derived fields compared under the threshold
+GATED_FIELDS = ("mbps", "speedup_vs_legacy")
+#: boolean derived fields that must hold wherever they appear
+INVARIANT_FLAGS = ("match", "match_tol", "bitwise_match", "within_tol")
+#: wire_bytes_* rows must keep at least this payload reduction vs fp32
+MIN_WIRE_REDUCTION = 3.5
+
+
+def load_rows(path: str) -> Dict[str, dict]:
+    with open(path) as f:
+        snap = json.load(f)
+    rows = snap.get("rows", {})
+    if not isinstance(rows, dict) or not rows:
+        raise SystemExit(f"{path}: no benchmark rows (schema mismatch?)")
+    return rows
+
+
+def _skipped(row: dict) -> bool:
+    return row.get("us", 0) == 0 or "skipped" in row.get("derived", {})
+
+
+def compare_rows(base: Dict[str, dict], new: Dict[str, dict],
+                 threshold: float) -> List[str]:
+    """All trajectory violations, empty when the gate passes."""
+    problems: List[str] = []
+    for name in sorted(base):
+        if not name.startswith(GATED_PREFIXES) or _skipped(base[name]):
+            continue
+        if name not in new or _skipped(new[name]):
+            problems.append(f"{name}: gated row missing/skipped in the new "
+                            f"snapshot (baseline has it)")
+            continue
+        bd, nd = base[name]["derived"], new[name]["derived"]
+        for field in GATED_FIELDS:
+            if not isinstance(bd.get(field), (int, float)):
+                continue
+            got = nd.get(field)
+            if not isinstance(got, (int, float)):
+                problems.append(f"{name}: field {field} missing in the new "
+                                f"snapshot (baseline={bd[field]:.2f})")
+                continue
+            floor = bd[field] * (1.0 - threshold)
+            if got < floor:
+                drop = 100.0 * (1.0 - got / bd[field])
+                problems.append(
+                    f"{name}: {field} regressed {drop:.1f}% "
+                    f"({bd[field]:.2f} -> {got:.2f}, floor {floor:.2f})")
+    for name in sorted(new):
+        derived = new[name].get("derived", {})
+        if _skipped(new[name]):
+            continue
+        for flag in INVARIANT_FLAGS:
+            if flag in derived and derived[flag] is not True:
+                problems.append(f"{name}: {flag}={derived[flag]} — "
+                                f"equivalence flag must be True")
+        if name.startswith("wire_bytes_"):
+            red = derived.get("reduction")
+            if not isinstance(red, (int, float)) \
+                    or red < MIN_WIRE_REDUCTION:
+                problems.append(
+                    f"{name}: payload reduction {red} below the "
+                    f"{MIN_WIRE_REDUCTION}x floor")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("snapshot", help="fresh BENCH_*.json to check")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--threshold",
+                    type=float,
+                    default=float(os.environ.get(
+                        "BENCH_REGRESSION_THRESHOLD", "0.15")),
+                    help="allowed fractional drop per gated field "
+                         "(default 0.15)")
+    args = ap.parse_args(argv)
+    base, new = load_rows(args.baseline), load_rows(args.snapshot)
+    gated = [n for n in base if n.startswith(GATED_PREFIXES)
+             and not _skipped(base[n])]
+    problems = compare_rows(base, new, args.threshold)
+    print(f"benchmark trajectory: {len(gated)} gated rows, "
+          f"threshold {args.threshold:.0%}")
+    for name in sorted(gated):
+        nd = new.get(name, {}).get("derived", {})
+        vals = ", ".join(f"{f}={nd[f]:.2f}"
+                         for f in GATED_FIELDS + ("reduction",)
+                         if isinstance(nd.get(f), (int, float)))
+        print(f"  {name}: {vals or ('MISSING' if name not in new else '-')}")
+    if problems:
+        for p in problems:
+            print(f"REGRESSION: {p}", file=sys.stderr)
+        return 1
+    print("trajectory holds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

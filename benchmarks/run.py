@@ -16,8 +16,19 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          with one straggler (~max client time) or one dead
                          node (~shared deadline, NOT n x timeout; the node
                          lands in failures, the round completes)
+  wire_bytes_*           quantized wire format (0xF3 int8 + per-chunk
+                         scales) vs raw fp32: per-round payload bytes both
+                         directions (derived = reduction + bounded-error
+                         equivalence of the aggregated round)
+  quantized_agg_*        fused dequantize+accumulate aggregation straight
+                         off the compressed buffers (derived = MB/s)
+  wire_codec_convergence negotiated q8 vs flat on the quickstart task
 
-Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+
+``--json`` writes the rows as a BENCH_*.json snapshot;
+``python -m benchmarks.compare`` diffs one against the committed
+benchmarks/BENCH_baseline.json and fails on regressions (the CI gate).
 """
 from __future__ import annotations
 
@@ -230,29 +241,61 @@ def bench_kernels(quick=False):
     print(f"kernel_rglru_scan,{us:.0f},interpret_mode;steps=256")
 
 
+_LEAF = 250_000                          # ~transformer-block-sized leaves
+# single-entry payload cache, keyed by layout label.  The quick CI lane
+# re-uses the same layouts across client counts; before this cache every
+# row re-generated the arrays and re-encoded BOTH codecs from scratch, so
+# the (untimed) legacy baseline setup was recomputed per row and the lane
+# crept toward the 30-minute job timeout as rows grew.  One entry only —
+# evicting on label change bounds peak memory to one model's payloads.
+_CASE_CACHE: dict = {}
+
+
+def _case_data(label, n_params, with_legacy):
+    import gc
+
+    from repro.fl.messages import FitRes, decode_fit_res, encode_fit_res
+
+    c = _CASE_CACHE
+    if c.get("label") != label:
+        c.clear()
+        gc.collect()
+        nleaves = max(1, n_params // _LEAF)
+        rng = np.random.default_rng(42)
+        arrays = [rng.random(_LEAF, np.float32) for _ in range(nleaves)]
+        c["nbytes"] = sum(a.nbytes for a in arrays)
+        c["flat"] = encode_fit_res(FitRes(arrays, 0, {}), codec="flat")
+        c["legacy"] = None
+        c["current"] = [np.zeros(_LEAF, np.float32) for _ in range(nleaves)]
+        del arrays
+        gc.collect()
+        # the label is the entry's validity marker — set LAST, so a
+        # MemoryError mid-population leaves a cache the next row rebuilds
+        # instead of a half-filled one it trusts
+        c["label"] = label
+    if with_legacy and c.get("legacy") is None:
+        # rebuild the per-array payload from the flat one (zero-copy views)
+        arrays = decode_fit_res(c["flat"]).parameters
+        c["legacy"] = encode_fit_res(FitRes(list(arrays), 0, {}),
+                                     codec="legacy")
+    return c
+
+
 def _agg_case(label, n_params, n_clients, with_legacy, low_memory=False):
     """Time the server aggregation hot path — TaskRes payload bytes ->
     new global model — for the flat engine and (optionally) the legacy
     per-layer path on identical inputs."""
-    import gc
-
     from repro.fl.legacy import LegacyFedAvg
-    from repro.fl.messages import FitRes, decode_fit_res, encode_fit_res
+    from repro.fl.messages import decode_fit_res
     from repro.fl.strategy import make_strategy
 
-    leaf = 250_000                       # ~transformer-block-sized leaves
-    nleaves = max(1, n_params // leaf)
-    rng = np.random.default_rng(42)
-    arrays = [rng.random(leaf, np.float32) for _ in range(nleaves)]
-    current = [np.zeros(leaf, np.float32) for _ in range(nleaves)]
-    nbytes = sum(a.nbytes for a in arrays)
+    case = _case_data(label, n_params, with_legacy)
+    current = case["current"]
+    nbytes = case["nbytes"]
     # all clients reuse one payload: aggregation cost is identical and the
     # bench fits in memory at 500M params x 64 clients
-    payload_flat = encode_fit_res(FitRes(arrays, 0, {}), codec="flat")
-    payload_legacy = encode_fit_res(FitRes(arrays, 0, {}), codec="legacy") \
-        if with_legacy else None
-    del arrays
-    gc.collect()
+    payload_flat = case["flat"]
+    payload_legacy = case["legacy"]
     weights = [10 + i for i in range(n_clients)]
 
     strat = make_strategy("fedavg", low_memory=low_memory)
@@ -283,11 +326,15 @@ def _agg_case(label, n_params, n_clients, with_legacy, low_memory=False):
 
 
 def bench_agg_throughput(quick=False):
-    cases = [("1M", 1_000_000, 4, True), ("1M", 1_000_000, 16, True),
-             ("50M", 50_000_000, 16, True)]
+    # cases stay GROUPED BY LABEL: _CASE_CACHE holds one layout's payloads
+    # and evicts on label change, so interleaving labels would regenerate
+    # and re-encode the same payloads several times over
+    cases = [("1M", 1_000_000, 4, True), ("1M", 1_000_000, 16, True)]
     if not quick:
-        cases += [("1M", 1_000_000, 64, True), ("50M", 50_000_000, 4, True),
-                  ("50M", 50_000_000, 64, False),
+        cases += [("1M", 1_000_000, 64, True), ("50M", 50_000_000, 4, True)]
+    cases += [("50M", 50_000_000, 16, True)]
+    if not quick:
+        cases += [("50M", 50_000_000, 64, False),
                   ("500M", 500_000_000, 4, False)]
     for label, n_params, n_clients, with_legacy in cases:
         try:
@@ -295,6 +342,128 @@ def bench_agg_throughput(quick=False):
                       low_memory=n_params >= 500_000_000)
         except MemoryError:
             print(f"agg_throughput_{label}_{n_clients}clients,0,skipped=oom")
+    _CASE_CACHE.clear()
+
+
+def _wire_case(label, n_params, n_clients):
+    """Quantized wire format (0xF3 int8 + per-chunk scales) vs raw fp32:
+    per-round payload bytes both directions, plus the fused
+    dequantize+accumulate aggregation on the compressed buffers, checked
+    against the fp32 path within the analytic quantization bound."""
+    import gc
+
+    from repro.fl.messages import (FitIns, FitRes, decode_fit_res,
+                                   encode_fit_ins, encode_fit_res,
+                                   peek_params)
+    from repro.fl.strategy import make_strategy
+
+    nleaves = max(1, n_params // _LEAF)
+    rng = np.random.default_rng(7)
+    model = [rng.normal(0, 0.5, (_LEAF,)).astype(np.float32)
+             for _ in range(nleaves)]
+    delta = [rng.normal(0, 1e-3, (_LEAF,)).astype(np.float32)
+             for _ in range(nleaves)]
+    result32 = [m + d for m, d in zip(model, delta)]
+    weights = [10 + i for i in range(n_clients)]
+
+    # fp32 reference round: raw 0xF1 frames both directions
+    down32 = encode_fit_ins(FitIns(model, {"round": 1}), codec="flat")
+    up32 = encode_fit_res(FitRes(result32, 0, {}), codec="flat")
+    strat = make_strategy("fedavg")
+    acc = strat.fit_accumulator(1, model)
+    t0 = time.perf_counter()
+    for c in range(n_clients):
+        r = decode_fit_res(up32)
+        r.num_examples = weights[c]
+        acc.add(f"site-{c}", r)
+    out32, _ = acc.finalize([])
+    t_f32 = time.perf_counter() - t0
+    fp32_bytes = n_clients * (len(down32) + len(up32))
+    del result32, up32, down32
+    gc.collect()
+
+    # q8 round: quantized downlink; clients train from the dequantized
+    # base and upload int8 DELTAS against it; the server reconstructs
+    # against its own downlink bytes (zero-copy, fused into the kernels)
+    t0 = time.perf_counter()
+    down8 = encode_fit_ins(FitIns(model, {"round": 1, "codec": "q8"}),
+                           codec="q8")
+    base_client = peek_params(down8).to_flat()   # what a client decodes
+    result8 = [b + d for b, d in
+               zip(base_client.to_arrays(), delta)]
+    up8 = encode_fit_res(FitRes(result8, 0, {}), codec="q8",
+                         base=base_client)
+    t_enc = time.perf_counter() - t0
+    del result8, base_client, delta
+    gc.collect()
+    q8_bytes = n_clients * (len(down8) + len(up8))
+
+    base_server = peek_params(down8)             # QuantParams, zero-copy
+    acc = strat.fit_accumulator(1, model)
+    t0 = time.perf_counter()
+    for c in range(n_clients):
+        r = decode_fit_res(up8)
+        r.num_examples = weights[c]
+        r.quant.base = base_server
+        acc.add(f"site-{c}", r)
+    out8, _ = acc.finalize([])
+    t_q8 = time.perf_counter() - t0
+
+    # |q8 round - fp32 round| <= downlink bound + uplink delta bound
+    tol = 0.5 * (float(base_server.scales.max())
+                 + float(decode_fit_res(up8).quant.scales.max())) \
+        * (1 + 1e-5) + 1e-6
+    err = max(float(np.abs(a.astype(np.float64) - b.astype(np.float64)).max())
+              for a, b in zip(out32, out8))
+    match_tol = err <= tol
+    reduction = fp32_bytes / q8_bytes
+    print(f"wire_bytes_{label}_{n_clients}clients,{t_enc * 1e6:.0f},"
+          f"fp32_mb={fp32_bytes / 1e6:.0f};q8_mb={q8_bytes / 1e6:.0f};"
+          f"reduction={reduction:.2f}x;max_err={err:.2e};"
+          f"match_tol={match_tol}")
+    print(f"quantized_agg_{label}_{n_clients}clients,{t_q8 * 1e6:.0f},"
+          f"mbps={len(up8) * n_clients / t_q8 / 1e6:.0f};"
+          f"fp32_equiv_mbps={n_params * 4 * n_clients / t_q8 / 1e6:.0f};"
+          f"vs_fp32_agg={t_f32 / t_q8:.2f}x")
+
+
+def bench_wire_codecs(quick=False):
+    cases = [("1M", 1_000_000, 16), ("50M", 50_000_000, 16)]
+    if not quick:
+        cases += [("50M", 50_000_000, 64)]
+    for label, n_params, n_clients in cases:
+        try:
+            _wire_case(label, n_params, n_clients)
+        except MemoryError:
+            print(f"wire_bytes_{label}_{n_clients}clients,0,skipped=oom")
+
+
+def bench_wire_convergence(quick=False):
+    """Negotiated q8 vs lossless flat on the quickstart task: the whole
+    stack (get_properties negotiation, quantized downlink, int8 delta
+    uplink, fused aggregation) with convergence within tolerance."""
+    from repro.core import run_native
+    from repro.fl import FedAvg, ServerApp, ServerConfig
+    from repro.fl.quickstart import make_client_app
+
+    sites = ["site-1", "site-2", "site-3"]
+    rounds = 2 if quick else 3
+
+    def run(codec):
+        app = ServerApp(ServerConfig(num_rounds=rounds, round_timeout=120,
+                                     codec=codec), FedAvg())
+        return _t(lambda: run_native(app, lambda s: make_client_app(s),
+                                     sites))
+
+    us32, h32 = run(None)
+    us8, h8 = run("q8")
+    l32, l8 = h32.losses()[-1][1], h8.losses()[-1][1]
+    assert h8.rounds[-1].metrics.get("wire_codec") == "q8", \
+        "q8 negotiation failed"
+    print(f"wire_codec_convergence,{us8 / rounds:.0f},"
+          f"loss_fp32={l32:.4f};loss_q8={l8:.4f};"
+          f"round_vs_fp32={us8 / max(us32, 1e-9):.2f}x;"
+          f"within_tol={abs(l32 - l8) < 0.05}")
 
 
 def _straggler_case(n_clients, delta, timeout, dead=False, rounds=2):
@@ -377,20 +546,95 @@ def bench_straggler_overlap(quick=False):
               f"legacy_behavior=abort;failures={nfail}")
 
 
+class _Tee:
+    """stdout wrapper that records everything written, so the CSV rows can
+    be re-emitted as a structured ``BENCH_*.json`` snapshot."""
+
+    def __init__(self, inner):
+        self.inner = inner
+        self.chunks = []
+
+    def write(self, s):
+        self.inner.write(s)
+        self.chunks.append(s)
+        return len(s)
+
+    def flush(self):
+        self.inner.flush()
+
+    def text(self):
+        return "".join(self.chunks)
+
+
+def _parse_derived(derived: str):
+    """``k=v;k=v`` (plus bare flags) -> dict with floats/bools parsed."""
+    out = {}
+    for tok in derived.split(";"):
+        tok = tok.strip()
+        if not tok:
+            continue
+        if "=" not in tok:
+            out[tok] = True
+            continue
+        k, v = tok.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+            continue
+        try:
+            out[k] = float(v.rstrip("x"))
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def rows_from_csv(text: str):
+    """Parse ``name,us_per_call,derived`` lines into the snapshot schema
+    (shared with benchmarks.compare)."""
+    import re
+
+    rows = {}
+    for line in text.splitlines():
+        m = re.match(r"^([a-z][A-Za-z0-9_]*),([0-9.eE+-]+),(.*)$", line)
+        if not m or m.group(1) == "name":
+            continue
+        rows[m.group(1)] = {"us": float(m.group(2)), "raw": m.group(3),
+                            "derived": _parse_derived(m.group(3))}
+    return rows
+
+
 def main() -> None:
+    import json
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write the rows as a BENCH_*.json snapshot "
+                         "(consumed by benchmarks.compare in CI)")
     args, _ = ap.parse_known_args()
-    print("name,us_per_call,derived")
-    ok = bench_fig5_reproducibility(args.quick)
-    bench_fig6_metric_streaming(args.quick)
-    bench_s41_reliable_overhead(args.quick)
-    bench_s31_multi_job(args.quick)
-    bench_strategies(args.quick)
-    bench_secagg(args.quick)
-    bench_kernels(args.quick)
-    bench_agg_throughput(args.quick)
-    bench_straggler_overlap(args.quick)
+    tee = _Tee(sys.stdout)
+    if args.json:
+        sys.stdout = tee
+    try:
+        print("name,us_per_call,derived")
+        ok = bench_fig5_reproducibility(args.quick)
+        bench_fig6_metric_streaming(args.quick)
+        bench_s41_reliable_overhead(args.quick)
+        bench_s31_multi_job(args.quick)
+        bench_strategies(args.quick)
+        bench_secagg(args.quick)
+        bench_kernels(args.quick)
+        bench_agg_throughput(args.quick)
+        bench_wire_codecs(args.quick)
+        bench_wire_convergence(args.quick)
+        bench_straggler_overlap(args.quick)
+    finally:
+        sys.stdout = tee.inner
+    if args.json:
+        snap = {"schema": 1, "quick": bool(args.quick),
+                "rows": rows_from_csv(tee.text())}
+        with open(args.json, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        print(f"wrote {args.json} ({len(snap['rows'])} rows)")
     if not ok:
         print("ERROR: fig5 reproducibility failed", file=sys.stderr)
         sys.exit(1)

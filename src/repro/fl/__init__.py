@@ -1,10 +1,12 @@
 from repro.fl.messages import (  # noqa: F401
     FitIns, FitRes, EvaluateIns, EvaluateRes, TaskIns, TaskRes,
+    UnsupportedCodec, WIRE_CODECS, QUANT_CODECS,
     arrays_to_bytes, bytes_to_arrays, params_to_arrays, arrays_to_params,
     set_default_codec,
 )
 from repro.fl.flat import (  # noqa: F401
-    FlatParams, Layout, layout_for, layout_of, unflatten_vector,
+    FlatParams, Layout, QuantParams, layout_for, layout_of,
+    quantize_int8, unflatten_vector,
 )
 from repro.fl.client import Client, ClientApp, NumPyClient  # noqa: F401
 from repro.fl.server import ServerApp, ServerConfig, Driver  # noqa: F401

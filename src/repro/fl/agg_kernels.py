@@ -22,6 +22,14 @@ resident in L2 while the loop streams each client's fp32 view exactly once:
   chunk-accumulated Gram matrix: ||a-b||^2 = ||a||^2 + ||b||^2 - 2<a,b>,
   one dgemm per chunk instead of the O(n^2) Python loop over full vectors.
 
+Every kernel reads its inputs through the chunked ``f64_chunk(lo, hi,
+out)`` protocol, which both :class:`~repro.fl.flat.FlatParams` (raw
+buffers) and :class:`~repro.fl.flat.QuantParams` (int8/bf16 compressed
+wire payloads) implement.  For quantized inputs the dequantize + scale
+(+ delta-base add) is **fused into the per-chunk read**, so accumulators
+consume compressed buffers directly — peak extra memory stays one
+CHUNK-sized fp64 scratch, never a model-size fp32 copy of the payload.
+
 NB (numpy>=2 / NEP 50): scalar weights MUST be ``np.float64`` — a bare
 python float is "weak" and would demote the multiply to the fp32 loop,
 silently breaking the exactness guarantee.
@@ -35,26 +43,10 @@ import numpy as np
 from repro.fl.flat import FlatParams, Layout, np_dtype
 
 # 16K elements: chunk fp64 accumulator + scratch = 256 KiB, L2-resident.
+# QCHUNK (int8 scale window) divides CHUNK, so quantized reads stay aligned.
 CHUNK = 1 << 14
 
 _FLOATS = {"float16", "float32", "float64"}
-
-
-def _f64_chunk(fp: FlatParams, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
-    """Elements [lo, hi) of ``fp`` as float64, written into ``out``."""
-    layout = fp.layout
-    o = out[:hi - lo]
-    if layout.uniform_dtype is not None:
-        np.copyto(o, fp.math_view()[lo:hi], casting="unsafe")
-        return o
-    for i, spec in enumerate(layout.leaves):      # mixed dtypes: per-segment
-        s, e = spec.eoffset, spec.eoffset + spec.size
-        if e <= lo or s >= hi:
-            continue
-        a, b = max(s, lo), min(e, hi)
-        np.copyto(o[a - lo:b - lo], fp.leaf(i).reshape(-1)[a - s:b - s],
-                  casting="unsafe")
-    return o
 
 
 def weighted_mean(pairs: Sequence[Tuple[FlatParams, float]],
@@ -79,10 +71,10 @@ def weighted_mean(pairs: Sequence[Tuple[FlatParams, float]],
     for lo in range(0, n, CHUNK):
         hi = min(lo + CHUNK, n)
         a = acc[:hi - lo]
-        x0 = _f64_chunk(pairs[0][0], lo, hi, tmp)
+        x0 = pairs[0][0].f64_chunk(lo, hi, tmp)
         np.multiply(x0, scaled[0], out=a)
         for (fp, _), sw in zip(pairs[1:], scaled[1:]):
-            x = _f64_chunk(fp, lo, hi, tmp)
+            x = fp.f64_chunk(lo, hi, tmp)
             np.multiply(x, sw, out=scratch[:hi - lo])
             a += scratch[:hi - lo]
         ovec[lo:hi] = a
@@ -110,7 +102,7 @@ class StreamingWeightedSum:
         n = self.layout.total_size
         for lo in range(0, n, CHUNK):
             hi = min(lo + CHUNK, n)
-            x = _f64_chunk(fp, lo, hi, self._tmp)
+            x = fp.f64_chunk(lo, hi, self._tmp)
             np.multiply(x, sw, out=self._scratch[:hi - lo])
             self._acc[lo:hi] += self._scratch[:hi - lo]
         self.total_w += float(w)
@@ -130,7 +122,7 @@ def _rowstack(flats: Sequence[FlatParams], lo: int, hi: int,
               m: np.ndarray) -> np.ndarray:
     tile = m[:len(flats), :hi - lo]
     for i, fp in enumerate(flats):
-        _f64_chunk(fp, lo, hi, tile[i])
+        fp.f64_chunk(lo, hi, tile[i])
     return tile
 
 

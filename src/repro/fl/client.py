@@ -18,12 +18,16 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.fl.messages import (EvaluateIns, EvaluateRes, FitIns, FitRes,
+from repro.fl.flat import FlatParams, QuantParams, quantizable
+from repro.fl.messages import (BF16_MAGIC, FLAT_MAGIC, Q8_MAGIC,
+                               QUANT_CODECS, WIRE_CODECS,
+                               EvaluateIns, EvaluateRes, FitIns, FitRes,
                                TaskIns, TaskRes, decode_evaluate_ins,
-                               decode_fit_ins, decode_task_ins,
-                               encode_evaluate_res, encode_fit_res,
+                               decode_fit_ins, decode_fit_res,
+                               decode_task_ins, encode_evaluate_res,
+                               encode_fit_res, encode_properties_res,
                                encode_task_ins, encode_task_res,
-                               arrays_to_bytes)
+                               arrays_to_bytes, peek_config, peek_params)
 
 NDArrays = List[np.ndarray]
 
@@ -35,6 +39,12 @@ class NumPyClient:
 
     def get_parameters(self, config: Dict[str, Any]) -> NDArrays:
         raise NotImplementedError
+
+    def get_properties(self, config: Dict[str, Any]) -> Dict[str, Any]:
+        """Site capabilities/metadata; the ClientApp merges in the wire
+        codecs this build speaks (``{"codecs": [...]}``) so the server can
+        negotiate a compressed payload encoding."""
+        return {}
 
     def fit(self, parameters: NDArrays, config: Dict[str, Any]
             ) -> Tuple[NDArrays, int, Dict[str, Any]]:
@@ -84,13 +94,41 @@ class ClientApp:
     # -------------------------------------------------------------- handle
     def handle(self, task_ins_bytes: bytes, cid: str = "0") -> bytes:
         task = decode_task_ins(task_ins_bytes)
+        # round-start params stashed by the innermost fit decode, so a
+        # quantized downlink is dequantized once (+ one memcpy), not once
+        # for training and again for the delta base in _maybe_compress
+        stash: Dict[str, Any] = {}
 
         def call(t: TaskIns) -> TaskRes:
             client = self._client(cid)
             try:
                 if t.task_type == "fit":
-                    res = client.handle_fit(decode_fit_ins(t.payload))
-                    return TaskRes("fit", t.round, encode_fit_res(res),
+                    ins = decode_fit_ins(t.payload)
+                    codec = ins.config.get("codec")
+                    if codec in QUANT_CODECS and ins.flat is not None \
+                            and len(t.payload) \
+                            and t.payload[0] in (BF16_MAGIC, Q8_MAGIC):
+                        # copy BEFORE fit() may mutate the views in place
+                        stash["base"] = FlatParams(ins.flat.buf.copy(),
+                                                   ins.flat.layout)
+                        stash["base_payload"] = t.payload
+                    res = client.handle_fit(ins)
+                    enc_codec = enc_base = None
+                    if not self.mods and codec in QUANT_CODECS:
+                        # no mod chain to feed: skip the intermediate
+                        # lossless frame and quantize directly (the
+                        # encoder still falls back to 0xF1 when the
+                        # result is not uniform fp32)
+                        base = stash.get("base")
+                        if base is None:            # raw 0xF1 downlink
+                            base = peek_params(t.payload)
+                            if isinstance(base, QuantParams):
+                                base = base.to_flat()
+                        if base is not None:        # delta-encodable only
+                            enc_codec, enc_base = codec, base
+                    return TaskRes("fit", t.round,
+                                   encode_fit_res(res, codec=enc_codec,
+                                                  base=enc_base),
                                    task_id=t.task_id)
                 if t.task_type == "evaluate":
                     res = client.handle_evaluate(decode_evaluate_ins(t.payload))
@@ -100,6 +138,12 @@ class ClientApp:
                     arrays = client.np_client.get_parameters({})
                     return TaskRes("get_parameters", t.round,
                                    arrays_to_bytes(arrays), task_id=t.task_id)
+                if t.task_type == "get_properties":
+                    props = dict(client.np_client.get_properties({}) or {})
+                    props.setdefault("codecs", list(WIRE_CODECS))
+                    return TaskRes("get_properties", t.round,
+                                   encode_properties_res(props),
+                                   task_id=t.task_id)
                 return TaskRes(t.task_type, t.round, b"",
                                task_id=t.task_id, error="unknown task type")
             except Exception as e:  # noqa: BLE001
@@ -109,7 +153,44 @@ class ClientApp:
         chain = call
         for mod in reversed(self.mods):
             chain = _bind_mod(mod, chain)
-        return encode_task_res(chain(task))
+        return encode_task_res(self._maybe_compress(task, chain(task),
+                                                    stash))
+
+    def _maybe_compress(self, task: TaskIns, res: TaskRes,
+                        stash: Optional[Dict[str, Any]] = None) -> TaskRes:
+        """Re-encode the final (post-mod-chain) fit result with the
+        negotiated lossy codec, as a **delta** against the round-start
+        parameters peeked from the pristine task payload (immune to
+        in-place mutation by ``fit``).
+
+        Running OUTSIDE the mod chain means DP/TopK/SecAgg compose
+        naturally: mods see exact fp32 buffers, and only the final wire
+        hop is quantized.  Results a mod already re-encoded to something
+        not uniform fp32 (e.g. SecAgg's uint64 masked shares, whose
+        pairwise masks must keep cancelling exactly in the server's
+        integer-domain sum) skip compression via the encoder's lossless
+        0xF1 fallback — which the header pre-check below shortcuts."""
+        codec = None
+        if task.task_type == "fit" and not res.error and res.payload:
+            codec = peek_config(task.payload).get("codec")
+        if codec not in QUANT_CODECS or res.payload[0] != FLAT_MAGIC:
+            return res                  # nothing requested, or non-flat out
+        fit = decode_fit_res(res.payload)          # zero-copy (0xF1)
+        if not quantizable(fit.flat.layout):
+            return res                  # lossy encode would fall back anyway
+        if stash and stash.get("base_payload") is task.payload:
+            base = stash["base"]        # pristine copy from the fit decode
+        else:
+            base = peek_params(task.payload)
+            if isinstance(base, QuantParams):
+                base = base.to_flat()   # what *we* trained from this round
+        if base is not None and base.layout != fit.flat.layout:
+            base = None                 # result re-shaped: no delta possible
+        if base is None:
+            return res                  # keep lossless rather than quantize
+        payload = encode_fit_res(fit, codec=codec, base=base)
+        return TaskRes(res.task_type, res.round, payload,
+                       task_id=res.task_id)
 
 
 def _bind_mod(mod: ModFn, nxt: Callable[[TaskIns], TaskRes]):

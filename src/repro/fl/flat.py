@@ -16,6 +16,14 @@ shapes, offsets).  Properties:
 
 The byte buffer preserves leaves bitwise, so the Fig. 5 exactness guarantee
 (native vs in-FLARE bit-identical) survives the representation change.
+
+:class:`QuantParams` is the **compressed** sibling (wire codecs ``0xF2``
+bf16 / ``0xF3`` int8 + per-chunk fp32 scales, see
+:mod:`repro.fl.messages`): a zero-copy view of the quantized payload that
+implements the same chunked-read protocol (``layout`` / :meth:`f64_chunk` /
+``nbytes``) as FlatParams, so the aggregation kernels consume compressed
+buffers directly — dequantize + scale (+ delta-base add) fused into the
+per-chunk accumulate, never materializing a model-size fp32 copy.
 """
 from __future__ import annotations
 
@@ -164,6 +172,27 @@ class FlatParams:
                           self.leaf(i).reshape(-1), casting="unsafe")
         return out
 
+    def f64_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        """Elements [lo, hi) as float64, written into ``out[:hi-lo]``.
+
+        The chunked-read protocol the aggregation kernels stream through;
+        :class:`QuantParams` implements the same method with the dequantize
+        fused in, so kernels are agnostic to the wire encoding.
+        """
+        o = out[:hi - lo]
+        layout = self.layout
+        if layout.uniform_dtype is not None:
+            np.copyto(o, self.math_view()[lo:hi], casting="unsafe")
+            return o
+        for i, spec in enumerate(layout.leaves):  # mixed dtypes: per-segment
+            s, e = spec.eoffset, spec.eoffset + spec.size
+            if e <= lo or s >= hi:
+                continue
+            a, b = max(s, lo), min(e, hi)
+            np.copyto(o[a - lo:b - lo], self.leaf(i).reshape(-1)[a - s:b - s],
+                      casting="unsafe")
+        return o
+
     def nbytes(self) -> int:
         return self.layout.total_bytes
 
@@ -175,3 +204,179 @@ def unflatten_vector(vec: np.ndarray, layout: Layout) -> NDArrays:
         seg = vec[spec.eoffset:spec.eoffset + spec.size]
         out.append(seg.reshape(spec.shape).astype(np_dtype(spec.dtype)))
     return out
+
+
+# ---------------------------------------------------------------------------
+# quantized payloads (wire codecs 0xF2 bf16 / 0xF3 int8 + per-chunk scales)
+# ---------------------------------------------------------------------------
+QCHUNK = 1024        # elements per int8 scale chunk (fp32 scale each)
+_QBLOCK = 1 << 20    # elements per quantize/dequantize pass (QCHUNK-aligned)
+
+
+def quantizable(layout: Layout) -> bool:
+    """Lossy codecs only apply to uniform-fp32 models; anything else
+    (mixed dtypes, SecAgg's uint64 shares, integer leaves) must travel
+    losslessly and falls back to the raw 0xF1 flat frame."""
+    return layout.uniform_dtype == "float32" and layout.total_size > 0
+
+
+def quantize_int8(vec: np.ndarray, qchunk: int = QCHUNK
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-chunk int8 quantization of a fp32 vector.
+
+    Each ``qchunk``-element window gets scale ``max|x| / 127`` (1.0 for
+    all-zero windows), so dequantization error is bounded per coordinate:
+    ``|x - scale * q| <= scale / 2``.  Returns ``(q int8, scales fp32)``.
+    """
+    n = int(vec.size)
+    nchunks = -(-n // qchunk)
+    scales = np.empty(nchunks, np.float32)
+    q = np.empty(n, np.int8)
+    block = max(_QBLOCK // qchunk, 1) * qchunk
+    for lo in range(0, n, block):
+        hi = min(lo + block, n)
+        x = np.asarray(vec[lo:hi], np.float32)
+        nfull = (hi - lo) // qchunk * qchunk
+        amax = (np.abs(x[:nfull]).reshape(-1, qchunk).max(axis=1)
+                if nfull else np.empty(0, np.float32))
+        if nfull < hi - lo:                       # ragged tail chunk
+            amax = np.append(amax, np.abs(x[nfull:]).max())
+        s = (amax / np.float32(127.0)).astype(np.float32)
+        s[s == 0] = np.float32(1.0)
+        c0 = lo // qchunk
+        scales[c0:c0 + s.size] = s
+        if nfull:       # broadcast one scale per (nchunks, qchunk) row
+            xs = x[:nfull].reshape(-1, qchunk) / s[:nfull // qchunk, None]
+            q[lo:lo + nfull] = np.clip(np.rint(xs), -127, 127) \
+                .astype(np.int8).reshape(-1)
+        if nfull < hi - lo:
+            xt = x[nfull:] / s[-1]
+            q[lo + nfull:hi] = np.clip(np.rint(xt), -127, 127) \
+                .astype(np.int8)
+    return q, scales
+
+
+def _dequant_q8(data: np.ndarray, scales: np.ndarray, qchunk: int,
+                lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+    """Fused int8 -> f64 dequantize of elements [lo, hi) into ``out``.
+
+    Rounds through fp32 (``int8 * fp32-scale`` is exact in f64, then one
+    fp32 rounding) so the server-side reconstruction is **bitwise equal**
+    to the fp32 arrays a client materializes from the same bytes.
+    """
+    o = out[:hi - lo]
+    np.copyto(o, data[lo:hi], casting="unsafe")
+    if lo % qchunk == 0:
+        # aligned fast path (kernel CHUNK is a multiple of QCHUNK):
+        # broadcast one scale per row of the (nchunks, qchunk) view
+        nfull = (hi - lo) // qchunk * qchunk
+        c0 = lo // qchunk
+        if nfull:
+            o[:nfull].reshape(-1, qchunk)[...] *= \
+                scales[c0:c0 + nfull // qchunk].astype(np.float64)[:, None]
+        if nfull < hi - lo:                       # ragged tail chunk
+            o[nfull:] *= np.float64(scales[c0 + nfull // qchunk])
+    else:
+        c0, c1 = lo // qchunk, -(-hi // qchunk)
+        sv = np.repeat(scales[c0:c1].astype(np.float64), qchunk)
+        o *= sv[lo - c0 * qchunk:lo - c0 * qchunk + (hi - lo)]
+    o[...] = o.astype(np.float32)
+    return o
+
+
+class QuantParams:
+    """Zero-copy view of a quantized wire payload.
+
+    Carries the *logical* fp32 :class:`Layout` plus the compressed data as
+    ``np.frombuffer`` views into the received message:
+
+    - ``mode="bf16"``: ``data`` is a bf16 vector (lossless to decode);
+    - ``mode="q8"``: ``data`` is int8 and ``scales`` holds one fp32 scale
+      per ``qchunk`` elements.
+
+    ``is_delta`` marks a payload encoded as (result - round-start params);
+    the server attaches ``base`` (the round's downlink params, FlatParams
+    or QuantParams) before handing it to the kernels, which then read
+    ``base + dequant(delta)`` through the same fused :meth:`f64_chunk`.
+    """
+
+    __slots__ = ("layout", "mode", "data", "scales", "qchunk", "is_delta",
+                 "base", "_chunk_cache")
+
+    def __init__(self, layout: Layout, mode: str, data: np.ndarray,
+                 scales: Optional[np.ndarray] = None, qchunk: int = QCHUNK,
+                 is_delta: bool = False, base=None):
+        assert mode in ("bf16", "q8"), mode
+        self.layout = layout
+        self.mode = mode
+        self.data = data
+        self.scales = scales
+        self.qchunk = qchunk
+        self.is_delta = is_delta
+        self.base = base
+        # last dequantized chunk, memoized when *this* object serves as a
+        # shared delta base.  Helps the deferred kernels (weighted_mean /
+        # _rowstack), which stream chunk-outer/client-inner so every
+        # client re-reads the same base chunk back to back; the
+        # low_memory streaming path folds client-outer and misses — it
+        # trades that redundant dequant for O(1)-model-size peak memory.
+        self._chunk_cache = None
+
+    # ------------------------------------------------------------- protocol
+    def f64_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        """Fused dequantize(+base-add) of elements [lo, hi) into ``out``."""
+        o = out[:hi - lo]
+        if self.mode == "bf16":
+            np.copyto(o, self.data[lo:hi], casting="unsafe")
+        else:
+            _dequant_q8(self.data, self.scales, self.qchunk, lo, hi, o)
+        if self.is_delta:
+            base = self.base
+            if base is None:
+                raise ValueError(
+                    "delta-encoded payload needs its round base attached "
+                    "(QuantParams.base) before it can be read")
+            arr = None
+            if isinstance(base, QuantParams):
+                c = base._chunk_cache
+                if c is not None and c[0] == lo and c[1] == hi:
+                    arr = c[2]
+            if arr is None:
+                arr = base.f64_chunk(lo, hi, np.empty(hi - lo, np.float64))
+                if isinstance(base, QuantParams):
+                    base._chunk_cache = (lo, hi, arr)
+            o += arr        # arr is read-only by contract: never mutated
+        return o
+
+    def to_f64(self, out: Optional[np.ndarray] = None) -> np.ndarray:
+        n = self.layout.total_size
+        if out is None:
+            out = np.empty(n, np.float64)
+        for lo in range(0, n, _QBLOCK):
+            hi = min(lo + _QBLOCK, n)
+            self.f64_chunk(lo, hi, out[lo:hi])
+        return out
+
+    def to_flat(self) -> FlatParams:
+        """Materialize the logical fp32 FlatParams (one fresh buffer)."""
+        out = FlatParams.zeros(self.layout)
+        mv = out.math_view()
+        tmp = np.empty(min(_QBLOCK, max(self.layout.total_size, 1)),
+                       np.float64)
+        n = self.layout.total_size
+        for lo in range(0, n, _QBLOCK):
+            hi = min(lo + _QBLOCK, n)
+            mv[lo:hi] = self.f64_chunk(lo, hi, tmp)
+        return out
+
+    def to_arrays(self) -> NDArrays:
+        return self.to_flat().to_arrays()
+
+    def math_view(self) -> np.ndarray:
+        raise TypeError(
+            "quantized payloads have no raw math view; stream them through "
+            "f64_chunk() or materialize with to_flat()")
+
+    def nbytes(self) -> int:
+        return int(self.data.nbytes
+                   + (self.scales.nbytes if self.scales is not None else 0))

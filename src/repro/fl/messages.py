@@ -1,6 +1,6 @@
 """Wire format for the Flower-analogue app layer.
 
-Everything that crosses a process/transport boundary is **bytes**.  Two
+Everything that crosses a process/transport boundary is **bytes**.  Four
 codecs coexist behind a leading version byte:
 
 - **flat** (default, magic ``0xF1``): one msgpack header (layout
@@ -10,14 +10,46 @@ codecs coexist behind a leading version byte:
   bytes, and the whole-model :class:`~repro.fl.flat.FlatParams` rides on
   the decoded message (``.flat``) so the aggregation kernels never touch
   per-layer Python loops.
+- **bf16** (magic ``0xF2``): the same frame with the fp32 payload stored
+  as bfloat16 — 2 bytes/param, exact exponent range, ~3 decimal digits.
+- **q8** (magic ``0xF3``): symmetric int8 quantization with one fp32
+  scale per :data:`~repro.fl.flat.QCHUNK`-element window — ~1 byte/param
+  (4x vs fp32) with per-coordinate error bounded by ``scale/2``.  Fit
+  results are encoded as **deltas** against the round-start parameters
+  (header flag ``d``), which keeps the quantization bound proportional to
+  the *update* magnitude, not the weights.  Both lossy frames decode
+  zero-copy into :class:`~repro.fl.flat.QuantParams`, which the
+  aggregation kernels stream through fused dequantize+accumulate reads.
 - **legacy** (any other first byte — legacy messages start with a msgpack
   fixmap/fixarray marker): per-array ``(dtype, shape, raw-buffer)``
   msgpack triples, exactly the seed format, kept for on-the-wire
   compatibility with older peers.
 
-Both encodings carry raw little-endian buffers, so either way the
-encoding is exact (bitwise) — a prerequisite for the paper's Fig. 5
-reproducibility claim (native vs. in-FLARE must match exactly).
+``0xF1`` and legacy carry raw little-endian buffers, so both are exact
+(bitwise) — the prerequisite for the paper's Fig. 5 reproducibility claim
+(native vs. in-FLARE must match exactly).  A reserved-range version byte
+(``0xF0``–``0xFF``) this build does not know raises
+:class:`UnsupportedCodec` instead of being misparsed as msgpack.
+
+Codec negotiation
+-----------------
+Lossy codecs are **opt-in and negotiated**, never assumed:
+
+1. Clients advertise the codecs they speak in their ``get_properties``
+   response (``{"codecs": [...]}`` — :class:`~repro.fl.client.ClientApp`
+   fills this in automatically; see :data:`WIRE_CODECS`).
+2. The ServerApp (``ServerConfig.codec="q8" | "bf16"``) intersects the
+   fleet's advertisements and picks a codec per round; any node that
+   fails to respond (e.g. an older peer that errors on the unknown task
+   type) demotes the round to the lossless ``flat`` codec.
+3. The negotiated codec rides in the fit config (``config["codec"]``);
+   the client's ClientApp re-encodes the final (post-mod-chain) FitRes
+   with it, as a delta against the round-start parameters it received.
+4. Decoding always auto-detects from the version byte, so a client that
+   ignores the request (or a mod whose output is not uniform fp32 — e.g.
+   SecAgg's uint64 masked shares) simply falls back to ``0xF1`` and
+   interoperates losslessly: negotiation is advisory, the frame is
+   authoritative.
 """
 from __future__ import annotations
 
@@ -30,21 +62,43 @@ import numpy as np
 
 import jax
 
-from repro.fl.flat import FlatParams, Layout, layout_for, layout_of, np_dtype
+from repro.fl.flat import (FlatParams, Layout, QCHUNK, QuantParams,
+                           layout_for, layout_of, np_dtype, quantizable,
+                           quantize_int8)
 
 NDArrays = List[np.ndarray]
 
 FLAT_MAGIC = 0xF1
+BF16_MAGIC = 0xF2
+Q8_MAGIC = 0xF3
 _HEADER_ALIGN = 64       # payload starts 64-byte aligned for fast views
 
+#: every codec this build can encode AND decode (advertised by clients in
+#: their get_properties response and intersected by the ServerApp)
+WIRE_CODECS = ("flat", "bf16", "q8", "legacy")
+#: the lossy subset, only used after successful negotiation
+QUANT_CODECS = ("bf16", "q8")
+
+_MAGIC_BY_CODEC = {"flat": FLAT_MAGIC, "bf16": BF16_MAGIC, "q8": Q8_MAGIC}
+_QUANT_MODE_BY_MAGIC = {BF16_MAGIC: "bf16", Q8_MAGIC: "q8"}
+
 _DEFAULT_CODEC = "flat"
+
+
+class UnsupportedCodec(ValueError):
+    """The frame's version byte is in the flat-family reserved range
+    (0xF0-0xFF) but this build has no decoder for it — e.g. a newer peer
+    skipped negotiation, or the snapshot is from a future version."""
 
 
 def set_default_codec(name: str) -> str:
     """Switch the process-wide encode codec ("flat" | "legacy").
 
-    Decoding always auto-detects, so mixed fleets interoperate; this only
-    controls what *we* put on the wire. Returns the previous codec.
+    The lossy codecs ("bf16" / "q8") are deliberately NOT accepted here:
+    they are negotiated per round (see module docstring), never a silent
+    process-wide default.  Decoding always auto-detects, so mixed fleets
+    interoperate; this only controls what *we* put on the wire.  Returns
+    the previous codec.
     """
     global _DEFAULT_CODEC
     if name not in ("flat", "legacy"):
@@ -72,42 +126,106 @@ def _unpack_array(d: Dict[str, Any]) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# flat codec framing
+# flat-family codec framing (0xF1 raw fp / 0xF2 bf16 / 0xF3 int8+scales)
 # ---------------------------------------------------------------------------
-def _flat_frame(head: Dict[str, Any], fp: FlatParams) -> bytes:
-    """[0xF1][u32 header_len][msgpack header][pad to 64][payload]"""
+def _frame(magic: int, head: Dict[str, Any], *payload) -> bytes:
+    """[magic][u32 header_len][msgpack header][pad to 64][payload...]"""
     h = msgpack.packb(head, use_bin_type=True)
     data_off = _aligned(5 + len(h))
-    prefix = bytes([FLAT_MAGIC]) + struct.pack("<I", len(h)) + h \
+    prefix = bytes([magic]) + struct.pack("<I", len(h)) + h \
         + b"\x00" * (data_off - 5 - len(h))
     # single copy of the model payload into the message
-    return b"".join((prefix, memoryview(fp.buf)))
+    return b"".join((prefix, *map(memoryview, payload)))
+
+
+def _flat_frame(head: Dict[str, Any], fp: FlatParams) -> bytes:
+    return _frame(FLAT_MAGIC, head, fp.buf)
 
 
 def _aligned(n: int) -> int:
     return -(-n // _HEADER_ALIGN) * _HEADER_ALIGN
 
 
-def _is_flat(b: bytes) -> bool:
-    return len(b) >= 5 and b[0] == FLAT_MAGIC
+def _is_framed(b: bytes) -> bool:
+    """Flat-family frame?  Legacy msgpack messages always start with a
+    container marker (fixmap/fixarray/map16/array16...), never 0xF0-0xFF,
+    so the reserved range is unambiguous."""
+    return len(b) >= 5 and b[0] >= 0xF0
 
 
-def _flat_unframe(b: bytes, writable: bool = False
-                  ) -> Tuple[Dict[str, Any], Optional[FlatParams]]:
-    """``writable=False`` wraps the message bytes zero-copy (read-only
-    views — the server aggregation hot path only reads).  ``writable=True``
-    copies the payload once into a fresh buffer: client-facing decodes use
-    it so ``fit(parameters, ...)`` may mutate in place, like the legacy
-    per-array codec allowed."""
+def _head_of(b: bytes) -> Tuple[Dict[str, Any], int]:
+    if b[0] not in (FLAT_MAGIC, BF16_MAGIC, Q8_MAGIC):
+        raise UnsupportedCodec(
+            f"unknown wire codec version byte 0x{b[0]:02X}; this build "
+            f"decodes 0xF1 (flat) / 0xF2 (bf16) / 0xF3 (q8) and legacy "
+            f"msgpack frames")
     (hlen,) = struct.unpack_from("<I", b, 1)
-    head = msgpack.unpackb(memoryview(b)[5:5 + hlen], raw=False)
-    fp = None
-    if "l" in head:
-        layout = layout_for([(d, tuple(s)) for d, s in head["l"]])
-        fp = FlatParams.from_buffer(b, layout, offset=_aligned(5 + hlen))
+    return msgpack.unpackb(memoryview(b)[5:5 + hlen], raw=False), hlen
+
+
+def _unframe(b: bytes, writable: bool = False
+             ) -> Tuple[Dict[str, Any], Optional[object]]:
+    """Decode any flat-family frame -> (header, FlatParams | QuantParams).
+
+    ``writable=False`` wraps the message bytes zero-copy (read-only
+    views — the server aggregation hot path only reads).  ``writable=True``
+    copies a 0xF1 payload once into a fresh buffer: client-facing decodes
+    use it so ``fit(parameters, ...)`` may mutate in place, like the legacy
+    per-array codec allowed.  (Quantized frames ignore it — materializing
+    them allocates fresh writable arrays anyway.)
+    """
+    head, hlen = _head_of(b)
+    if "l" not in head:
+        return head, None
+    layout = layout_for([(d, tuple(s)) for d, s in head["l"]])
+    off = _aligned(5 + hlen)
+    if b[0] == FLAT_MAGIC:
+        fp = FlatParams.from_buffer(b, layout, offset=off)
         if writable:
             fp = FlatParams(fp.buf.copy(), layout)
-    return head, fp
+        return head, fp
+    n = layout.total_size
+    is_delta = bool(head.get("d", 0))
+    if b[0] == BF16_MAGIC:
+        data = np.frombuffer(b, np_dtype("bfloat16"), count=n, offset=off)
+        return head, QuantParams(layout, "bf16", data, is_delta=is_delta)
+    qchunk = int(head.get("qc", QCHUNK))
+    nchunks = -(-n // qchunk)
+    scales = np.frombuffer(b, np.float32, count=nchunks, offset=off)
+    data = np.frombuffer(b, np.int8, count=n, offset=off + 4 * nchunks)
+    return head, QuantParams(layout, "q8", data, scales, qchunk,
+                             is_delta=is_delta)
+
+
+def _quant_frame(head: Dict[str, Any], fp: FlatParams, codec: str,
+                 base: Optional[FlatParams]) -> bytes:
+    """Encode ``fp`` (uniform fp32) as a bf16/q8 frame, as a delta against
+    ``base`` (the round-start parameters) when one is supplied."""
+    x = fp.math_view()
+    if base is not None:
+        x = x - base.math_view()             # fp32 delta, bounds the error
+        head["d"] = 1
+    if codec == "bf16":
+        return _frame(BF16_MAGIC, head,
+                      x.astype(np_dtype("bfloat16")).view(np.uint8))
+    q, scales = quantize_int8(x)
+    head["qc"] = QCHUNK
+    return _frame(Q8_MAGIC, head, scales.view(np.uint8), q.view(np.uint8))
+
+
+def _pick_wire(codec: Optional[str], fp_layout: Layout,
+               base: Optional[FlatParams]) -> str:
+    """Resolve the effective codec: a lossy request silently demotes to
+    the lossless flat frame when the payload is not uniform fp32, or when
+    the delta base does not match the result layout."""
+    codec = codec or _DEFAULT_CODEC
+    if codec in QUANT_CODECS:
+        if not quantizable(fp_layout):
+            return "flat"
+        if base is not None and base.layout is not fp_layout \
+                and base.layout != fp_layout:
+            return "flat"
+    return codec
 
 
 def _leaf_sig(fp: FlatParams) -> List[List[Any]]:
@@ -118,20 +236,60 @@ def _as_flat(parameters: NDArrays, flat: Optional[FlatParams]) -> FlatParams:
     return flat if flat is not None else FlatParams.from_arrays(parameters)
 
 
+def _framed_encode(parameters: NDArrays, flat: Optional[FlatParams],
+                   head_extra: Dict[str, Any], codec: Optional[str],
+                   base: Optional[FlatParams] = None) -> bytes:
+    """Shared flat-family encode dispatch: flatten, resolve the effective
+    codec (lossy requests demote per :func:`_pick_wire`), frame.  Callers
+    handle the "legacy" codec themselves — it has no flat layout and each
+    message shapes its msgpack map differently."""
+    fp = _as_flat(parameters, flat)
+    codec = _pick_wire(codec, fp.layout, base)
+    head = {"l": _leaf_sig(fp), **head_extra}
+    if codec in QUANT_CODECS:
+        return _quant_frame(head, fp, codec, base)
+    return _flat_frame(head, fp)
+
+
+# ---------------------------------------------------------------------------
+# header-only peeks (cheap reads the negotiation/delta paths rely on)
+# ---------------------------------------------------------------------------
+def peek_config(b: bytes) -> Dict[str, Any]:
+    """The config dict of a framed FitIns/EvaluateIns, header-only (the
+    payload is not touched).  Legacy frames return {} — negotiated codecs
+    never ride legacy messages."""
+    if not _is_framed(b):
+        return {}
+    return _head_of(b)[0].get("c", {})
+
+
+def peek_params(b: bytes):
+    """Zero-copy read-only view of a framed message's parameters
+    (FlatParams or QuantParams), or None for legacy/param-less frames.
+
+    This is how both ends recover the *round-start* parameters bitwise:
+    the client peeks the pristine task payload (immune to in-place
+    mutation by ``fit``), the server peeks its own downlink bytes — so
+    delta encode and delta reconstruction agree exactly."""
+    if not _is_framed(b):
+        return None
+    return _unframe(b, writable=False)[1]
+
+
 # ---------------------------------------------------------------------------
 # NDArrays <-> bytes (get_parameters / initial parameters path)
 # ---------------------------------------------------------------------------
 def arrays_to_bytes(arrays: NDArrays, codec: Optional[str] = None) -> bytes:
-    if (codec or _DEFAULT_CODEC) == "flat":
-        fp = FlatParams.from_arrays(arrays)
-        return _flat_frame({"l": _leaf_sig(fp)}, fp)
-    return msgpack.packb([_pack_array(a) for a in arrays], use_bin_type=True)
+    if (codec or _DEFAULT_CODEC) == "legacy":     # skip the flatten copy
+        return msgpack.packb([_pack_array(a) for a in arrays],
+                             use_bin_type=True)
+    return _framed_encode(arrays, None, {}, codec)
 
 
 def bytes_to_arrays(b: bytes) -> NDArrays:
-    if _is_flat(b):
-        _, fp = _flat_unframe(b, writable=True)   # one-shot path, not hot
-        return fp.to_arrays()
+    if _is_framed(b):
+        _, p = _unframe(b, writable=True)         # one-shot path, not hot
+        return p.to_arrays()
     return [_unpack_array(d) for d in msgpack.unpackb(b, raw=False)]
 
 
@@ -161,16 +319,29 @@ class FitIns:
 
 @dataclass
 class FitRes:
-    parameters: NDArrays
+    # None when the result arrived quantized (``quant`` set) — the server
+    # hot path streams the compressed buffer through the kernels instead
+    # of materializing per-leaf arrays; call materialize() if needed.
+    parameters: Optional[NDArrays]
     num_examples: int
     metrics: Dict[str, Any] = field(default_factory=dict)
     flat: Optional[FlatParams] = field(default=None, repr=False, compare=False)
+    quant: Optional[QuantParams] = field(default=None, repr=False,
+                                         compare=False)
 
     def set_parameters(self, arrays: NDArrays,
                        flat: Optional[FlatParams] = None) -> None:
-        """Replace parameters, keeping the cached flat view coherent."""
+        """Replace parameters, keeping the cached views coherent."""
         self.parameters = arrays
         self.flat = flat
+        self.quant = None
+
+    def materialize(self) -> NDArrays:
+        """Per-leaf fp32 arrays, dequantizing if the result is compressed
+        (a delta-encoded result needs its ``quant.base`` attached)."""
+        if self.parameters is None:
+            self.parameters = self.quant.to_arrays()
+        return self.parameters
 
 
 @dataclass
@@ -217,51 +388,76 @@ def _enc_config(cfg: Dict[str, Any]) -> Dict[str, Any]:
     return out
 
 
+def _materialized(p) -> FlatParams:
+    """FlatParams for a client-facing decode: 0xF1 payloads arrive here
+    already copied into a writable buffer (``_unframe(writable=True)``);
+    quantized payloads materialize fresh (writable) fp32 arrays."""
+    if isinstance(p, QuantParams):
+        if p.is_delta:
+            raise ValueError(
+                "delta-encoded parameters cannot be decoded client-side "
+                "(no round base); only fit results travel as deltas")
+        return p.to_flat()
+    return p
+
+
 def encode_fit_ins(x: FitIns, codec: Optional[str] = None) -> bytes:
-    if (codec or _DEFAULT_CODEC) == "flat":
-        fp = _as_flat(x.parameters, x.flat)
-        return _flat_frame({"l": _leaf_sig(fp), "c": _enc_config(x.config)}, fp)
-    return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
-                          "c": _enc_config(x.config)}, use_bin_type=True)
+    if (codec or _DEFAULT_CODEC) == "legacy":     # skip the flatten copy
+        return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
+                              "c": _enc_config(x.config)}, use_bin_type=True)
+    return _framed_encode(x.parameters, x.flat,
+                          {"c": _enc_config(x.config)}, codec)
 
 
 def decode_fit_ins(b: bytes) -> FitIns:
-    if _is_flat(b):
-        head, fp = _flat_unframe(b, writable=True)
+    if _is_framed(b):
+        head, p = _unframe(b, writable=True)
+        fp = _materialized(p)
         return FitIns(fp.to_arrays(), head.get("c", {}), flat=fp)
     d = msgpack.unpackb(b, raw=False)
     return FitIns([_unpack_array(a) for a in d["p"]], d["c"])
 
 
-def encode_fit_res(x: FitRes, codec: Optional[str] = None) -> bytes:
-    if (codec or _DEFAULT_CODEC) == "flat":
-        fp = _as_flat(x.parameters, x.flat)
-        return _flat_frame({"l": _leaf_sig(fp), "n": x.num_examples,
-                            "m": _enc_config(x.metrics)}, fp)
-    return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
-                          "n": x.num_examples, "m": _enc_config(x.metrics)},
-                         use_bin_type=True)
+def encode_fit_res(x: FitRes, codec: Optional[str] = None,
+                   base: Optional[FlatParams] = None) -> bytes:
+    """``base`` (the round-start parameters) turns a lossy encode into a
+    delta encode: the int8/bf16 payload is (result - base), whose smaller
+    dynamic range keeps the quantization error bounded by the update
+    magnitude.  The decoder reconstructs after the server re-attaches the
+    base (see :func:`peek_params`)."""
+    if (codec or _DEFAULT_CODEC) == "legacy":     # skip the flatten copy
+        return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
+                              "n": x.num_examples,
+                              "m": _enc_config(x.metrics)},
+                             use_bin_type=True)
+    return _framed_encode(x.parameters, x.flat,
+                          {"n": x.num_examples, "m": _enc_config(x.metrics)},
+                          codec, base)
 
 
 def decode_fit_res(b: bytes) -> FitRes:
-    if _is_flat(b):
-        head, fp = _flat_unframe(b)
-        return FitRes(fp.to_arrays(), head["n"], head.get("m", {}), flat=fp)
+    if _is_framed(b):
+        head, p = _unframe(b)
+        if isinstance(p, QuantParams):
+            # hot path stays compressed: kernels stream it via f64_chunk
+            return FitRes(None, head["n"], head.get("m", {}), quant=p)
+        return FitRes(p.to_arrays(), head["n"], head.get("m", {}), flat=p)
     d = msgpack.unpackb(b, raw=False)
     return FitRes([_unpack_array(a) for a in d["p"]], d["n"], d["m"])
 
 
 def encode_evaluate_ins(x: EvaluateIns, codec: Optional[str] = None) -> bytes:
-    if (codec or _DEFAULT_CODEC) == "flat":
-        fp = _as_flat(x.parameters, x.flat)
-        return _flat_frame({"l": _leaf_sig(fp), "c": _enc_config(x.config)}, fp)
-    return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
-                          "c": _enc_config(x.config)}, use_bin_type=True)
+    if (codec or _DEFAULT_CODEC) == "legacy":     # skip the flatten copy
+        return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
+                              "c": _enc_config(x.config)}, use_bin_type=True)
+    return _framed_encode(x.parameters, x.flat,
+                          {"c": _enc_config(x.config)}, codec)
 
 
 def decode_evaluate_ins(b: bytes) -> EvaluateIns:
-    if _is_flat(b):
-        head, fp = _flat_unframe(b, writable=True)
+    if _is_framed(b):
+        head, p = _unframe(b, writable=True)
+        fp = _materialized(p)
         return EvaluateIns(fp.to_arrays(), head.get("c", {}), flat=fp)
     d = msgpack.unpackb(b, raw=False)
     return EvaluateIns([_unpack_array(a) for a in d["p"]], d["c"])
@@ -275,6 +471,16 @@ def encode_evaluate_res(x: EvaluateRes) -> bytes:
 def decode_evaluate_res(b: bytes) -> EvaluateRes:
     d = msgpack.unpackb(b, raw=False)
     return EvaluateRes(d["l"], d["n"], d["m"])
+
+
+def encode_properties_res(props: Dict[str, Any]) -> bytes:
+    """get_properties response — plain msgpack (codec lists and friends;
+    no tensor payload, so no framing needed)."""
+    return msgpack.packb(props, use_bin_type=True)
+
+
+def decode_properties_res(b: bytes) -> Dict[str, Any]:
+    return msgpack.unpackb(b, raw=False)
 
 
 def encode_task_ins(t: TaskIns) -> bytes:

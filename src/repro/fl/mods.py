@@ -23,6 +23,16 @@ compatibility with older peers; only the application is vectorized.
 - :class:`TopKCompressionMod` — magnitude Top-K delta sparsification,
   global over the flat delta (a single threshold for the whole model,
   which keeps the largest-magnitude coordinates regardless of layer).
+
+Composition with the quantized wire codecs (0xF2/0xF3): mods run INSIDE
+the mod chain on exact fp32 buffers; the negotiated lossy re-encode
+happens once, after the chain, at the ClientApp boundary
+(``ClientApp._maybe_compress``).  So DP noise/clipping and TopK
+sparsification are applied exactly and only the final wire hop is
+quantized, while SecAgg's masked shares — already in the quantized
+**integer domain** (fixed-point uint64, masks cancelling mod 2^64) — are
+not uniform fp32 and therefore ship on the lossless 0xF1 frame: pairwise
+masks keep cancelling bit-exactly in the server's wrapping sum.
 """
 from __future__ import annotations
 

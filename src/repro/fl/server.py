@@ -17,10 +17,11 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.fl.messages import (EvaluateRes, TaskIns, decode_evaluate_res,
-                               decode_fit_res, decode_task_res,
+from repro.fl.messages import (WIRE_CODECS, EvaluateRes, TaskIns,
+                               decode_evaluate_res, decode_fit_res,
+                               decode_properties_res, decode_task_res,
                                encode_evaluate_ins, encode_fit_ins,
-                               encode_task_ins, bytes_to_arrays)
+                               encode_task_ins, bytes_to_arrays, peek_params)
 from repro.fl.strategy import Strategy
 
 NDArrays = List[np.ndarray]
@@ -30,6 +31,12 @@ NDArrays = List[np.ndarray]
 class ServerConfig:
     num_rounds: int = 3
     round_timeout: float = 120.0
+    # requested wire codec for the model payloads ("q8" int8+per-chunk
+    # scales, "bf16", or None/"flat" for the lossless default).  A lossy
+    # codec is only used after every node advertises it via
+    # get_properties; otherwise the run demotes to "flat" (see
+    # repro.fl.messages module docstring, "Codec negotiation").
+    codec: Optional[str] = None
 
 
 class Driver:
@@ -96,6 +103,27 @@ class ServerApp:
         self.strategy = strategy
 
     @staticmethod
+    def _memo_encode(memo: Dict[Any, bytes], ins, enc_fn,
+                     codec: Optional[str]) -> bytes:
+        """One (potentially lossy, model-size) encode per distinct
+        broadcast (params, config) per round — all nodes usually share
+        the same parameters object, so this is one quantization pass per
+        round, not one per node.  Shared by the fit and evaluate phases
+        so their key scheme can never desynchronize."""
+        try:
+            key = (id(ins.parameters), id(ins.flat),
+                   tuple(sorted(ins.config.items())))
+            payload = memo.get(key)
+        except TypeError:
+            # unhashable/unsortable config value: skip the memo so the
+            # encoder's own "not wire-safe" error (the pre-memo
+            # behavior) surfaces
+            return enc_fn(ins, codec=codec)
+        if payload is None:
+            payload = memo[key] = enc_fn(ins, codec=codec)
+        return payload
+
+    @staticmethod
     def _exchange(driver: Driver, tasks: Dict[str, bytes], timeout: float,
                   on_result) -> List[Tuple[str, str]]:
         """Stream one round-trip: decode each TaskRes as it arrives and
@@ -118,12 +146,54 @@ class ServerApp:
             failures.append((node, "timeout"))
         return failures
 
+    # -------------------------------------------------------- negotiation
+    def _negotiate_codec(self, driver: Driver,
+                         nodes: List[str]) -> Tuple[str, str]:
+        """Pick the wire codec for this run: the configured lossy codec if
+        EVERY node advertises it in get_properties, else lossless "flat".
+
+        A node that errors on the unknown task type (older peer) or
+        misses the deadline demotes the whole fleet — a lossy frame it
+        cannot decode would cost the round anyway.  Returns ``(codec,
+        demotion_note)``; the note names the nodes responsible so a
+        demoted run is visible in every RoundRecord, not silent."""
+        want = self.config.codec or "flat"
+        if want == "flat":
+            return "flat", ""
+        if want not in WIRE_CODECS:
+            raise ValueError(f"unknown codec {want!r}; have {WIRE_CODECS}")
+        tasks = {node: encode_task_ins(TaskIns(
+            "get_properties", 0, b"", task_id=uuid.uuid4().hex))
+            for node in nodes}
+        supported: Optional[set] = None
+        lacking: List[str] = []
+
+        def on_props(node, tr):
+            nonlocal supported
+            cs = set(decode_properties_res(tr.payload)
+                     .get("codecs", ("flat", "legacy")))
+            if want not in cs:
+                lacking.append(node)
+            supported = cs if supported is None else supported & cs
+
+        failures = self._exchange(driver, tasks, self.config.round_timeout,
+                                  on_props)
+        if failures or supported is None or want not in supported:
+            culprits = sorted(set(lacking) | {n for n, _ in failures})
+            return "flat", (f"{want} demoted to flat by "
+                            f"{','.join(culprits) or 'empty fleet'}")
+        return want, ""
+
     # ------------------------------------------------------------- rounds
     def run(self, driver: Driver) -> History:
         history = History()
         nodes = sorted(driver.node_ids())
         if not nodes:
             raise RuntimeError("no connected nodes")
+        wire_codec, demotion = self._negotiate_codec(driver, nodes)
+        # "flat" means: leave the encode to the process default (which may
+        # legitimately be "legacy" for mixed-fleet deployments)
+        enc_codec = None if wire_codec == "flat" else wire_codec
 
         # round 0: pull initial parameters if the strategy does not provide
         # them — probed in small waves, each under ONE shared deadline and
@@ -165,27 +235,64 @@ class ServerApp:
             # ---- fit phase ----------------------------------------------
             fit_cfg = self.strategy.configure_fit(rnd, parameters, nodes)
             tasks = {}
+            fit_payloads: Dict[str, bytes] = {}
+            enc_memo: Dict[Any, bytes] = {}
             for node, ins in fit_cfg.items():
-                t = TaskIns("fit", rnd, encode_fit_ins(ins),
-                            task_id=uuid.uuid4().hex)
+                if wire_codec != "flat":
+                    ins.config.setdefault("codec", wire_codec)
+                payload = self._memo_encode(enc_memo, ins, encode_fit_ins,
+                                            enc_codec)
+                fit_payloads[node] = payload
+                t = TaskIns("fit", rnd, payload, task_id=uuid.uuid4().hex)
                 tasks[node] = encode_task_ins(t)
+            # delta reconstruction bases: OUR OWN downlink bytes, i.e.
+            # exactly what each client decoded and trained from — client
+            # and server agree on the round base bitwise even when the
+            # downlink itself is quantized
+            bases: Dict[int, Any] = {}
+
+            def _base_for(node):
+                p = fit_payloads[node]
+                bp = bases.get(id(p))
+                if bp is None:
+                    bp = bases[id(p)] = peek_params(p)
+                return bp
+
+            def on_fit(node, tr):
+                res = decode_fit_res(tr.payload)
+                q = res.quant
+                if q is not None and q.is_delta and q.base is None:
+                    q.base = _base_for(node)
+                acc.add(node, res)
+
             # results fold into the strategy's accumulator as they arrive
             # (zero-copy flat views / streaming sums — no per-layer stacking)
             acc = self.strategy.fit_accumulator(rnd, parameters)
             # stragglers / dead nodes: recorded failures, not round-aborting
             failures = self._exchange(
-                driver, tasks, self.config.round_timeout,
-                lambda node, tr: acc.add(node, decode_fit_res(tr.payload)))
+                driver, tasks, self.config.round_timeout, on_fit)
             parameters, agg_metrics = acc.finalize(failures)
 
             # ---- evaluate phase ------------------------------------------
             ev_cfg = self.strategy.configure_evaluate(rnd, parameters, nodes)
             record = RoundRecord(rnd, metrics=dict(agg_metrics),
                                  failures=list(failures))
+            if self.config.codec and self.config.codec != "flat":
+                # a requested lossy codec is ALWAYS reported — seeing
+                # wire_codec="flat" (+ the demotion note) tells the
+                # operator the fleet fell back to raw fp32
+                record.metrics.setdefault("wire_codec", wire_codec)
+                if demotion:
+                    record.metrics.setdefault("wire_codec_demotion",
+                                              demotion)
             if ev_cfg:
                 tasks = {}
+                ev_memo: Dict[Any, bytes] = {}
                 for node, ins in ev_cfg.items():
-                    t = TaskIns("evaluate", rnd, encode_evaluate_ins(ins),
+                    payload = self._memo_encode(ev_memo, ins,
+                                                encode_evaluate_ins,
+                                                enc_codec)
+                    t = TaskIns("evaluate", rnd, payload,
                                 task_id=uuid.uuid4().hex)
                     tasks[node] = encode_task_ins(t)
                 ev_results: List[Tuple[str, EvaluateRes]] = []

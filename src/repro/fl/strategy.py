@@ -45,13 +45,19 @@ class QuorumNotMet(RuntimeError):
     ``failures`` and the round continues — unless the quorum breaks."""
 
 
-def _flat_of(res: FitRes) -> FlatParams:
-    """The FitRes's zero-copy flat view, packing only if it has none."""
-    return res.flat if res.flat is not None else \
-        FlatParams.from_arrays(res.parameters)
+def _flat_of(res: FitRes):
+    """The FitRes's zero-copy view — FlatParams for raw payloads, the
+    still-compressed QuantParams for quantized ones (the kernels stream
+    either through the fused ``f64_chunk`` protocol) — packing only if it
+    has neither."""
+    if res.flat is not None:
+        return res.flat
+    if res.quant is not None:
+        return res.quant
+    return FlatParams.from_arrays(res.parameters)
 
 
-def _check_shapes(fp: FlatParams, current: NDArrays, node: str) -> None:
+def _check_shapes(fp, current: NDArrays, node: str) -> None:
     """Reject a result whose tensor shapes don't match the global model.
 
     Raised at ``add`` time so the ServerApp demotes the byzantine/buggy
@@ -96,6 +102,11 @@ class FitAccumulator:
         # results may have streamed in arrival order; canonicalize so the
         # aggregate is independent of who finished first (bitwise repro)
         self.results.sort(key=lambda nr: nr[0])
+        for _, res in self.results:
+            if res.parameters is None:
+                # batch-API strategies predate the compressed wire format
+                # and read res.parameters directly — honor that contract
+                res.materialize()
         return self.strategy.aggregate_fit(self.rnd, self.results, failures,
                                            self.current)
 

@@ -1,0 +1,159 @@
+"""benchmarks/compare.py — the benchmark-trajectory CI gate.
+
+Drives the comparator with doctored snapshots: a >15% drop in any gated
+throughput/speedup row, a broken equivalence flag, a missing gated row, or
+a wire-format reduction below the 3.5x floor must all fail; noise within
+the threshold must pass.  Also round-trips the snapshot writer
+(``rows_from_csv``) so the gate consumes exactly what ``run --json``
+emits.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.compare import compare_rows, load_rows, main  # noqa: E402
+from benchmarks.run import rows_from_csv  # noqa: E402
+
+
+def _row(us=1000.0, **derived):
+    return {"us": us, "raw": "", "derived": derived}
+
+
+def _baseline():
+    return {
+        "agg_throughput_50M_16clients": _row(
+            mbps=4500.0, speedup_vs_legacy=7.8, match=True),
+        "agg_throughput_1M_4clients": _row(
+            mbps=900.0, speedup_vs_legacy=3.0, match=True),
+        "quantized_agg_50M_16clients": _row(mbps=400.0),
+        "wire_bytes_50M_16clients": _row(reduction=3.98, match_tol=True),
+        "agg_throughput_500M_4clients": _row(us=0, skipped="oom"),
+        "fig5_flare_round": _row(bitwise_match=True),
+        "straggler_overlap_4clients": _row(round_over_delta=1.06),
+    }
+
+
+def test_identical_snapshots_pass():
+    assert compare_rows(_baseline(), _baseline(), 0.15) == []
+
+
+def test_noise_within_threshold_passes():
+    new = _baseline()
+    new["agg_throughput_50M_16clients"]["derived"]["mbps"] = 4500.0 * 0.90
+    new["agg_throughput_1M_4clients"]["derived"]["speedup_vs_legacy"] = 2.9
+    assert compare_rows(_baseline(), new, 0.15) == []
+
+
+def test_doctored_mbps_regression_fails():
+    new = _baseline()
+    new["agg_throughput_50M_16clients"]["derived"]["mbps"] = 4500.0 * 0.80
+    problems = compare_rows(_baseline(), new, 0.15)
+    assert len(problems) == 1 and "mbps regressed 20.0%" in problems[0]
+
+
+def test_doctored_speedup_regression_fails():
+    new = _baseline()
+    new["agg_throughput_50M_16clients"]["derived"]["speedup_vs_legacy"] = 5.0
+    assert any("speedup_vs_legacy" in p
+               for p in compare_rows(_baseline(), new, 0.15))
+
+
+def test_quantized_agg_rows_are_gated_too():
+    new = _baseline()
+    new["quantized_agg_50M_16clients"]["derived"]["mbps"] = 400.0 * 0.5
+    assert any("quantized_agg_50M_16clients" in p
+               for p in compare_rows(_baseline(), new, 0.15))
+
+
+def test_missing_gated_row_fails_but_skipped_rows_dont():
+    new = _baseline()
+    del new["agg_throughput_1M_4clients"]
+    del new["agg_throughput_500M_4clients"]     # skipped in baseline: fine
+    problems = compare_rows(_baseline(), new, 0.15)
+    assert len(problems) == 1 and "agg_throughput_1M_4clients" in problems[0]
+
+
+def test_broken_equivalence_flag_fails_even_if_fast():
+    new = _baseline()
+    new["agg_throughput_50M_16clients"]["derived"].update(
+        mbps=9000.0, match=False)
+    assert any("match=False" in p for p in compare_rows(_baseline(), new,
+                                                        0.15))
+    new2 = _baseline()
+    new2["fig5_flare_round"]["derived"]["bitwise_match"] = False
+    assert any("bitwise_match" in p
+               for p in compare_rows(_baseline(), new2, 0.15))
+
+
+def test_wire_reduction_floor_enforced():
+    new = _baseline()
+    new["wire_bytes_50M_16clients"]["derived"]["reduction"] = 3.0
+    assert any("3.5" in p for p in compare_rows(_baseline(), new, 0.15))
+
+
+def test_missing_or_skipped_wire_rows_fail():
+    """Losing the wire_bytes_* / wire_codec_convergence rows would retire
+    the 3.5x-reduction and convergence checks with them — gated."""
+    base = _baseline()
+    base["wire_codec_convergence"] = _row(within_tol=True)
+    gone = dict(base)
+    del gone["wire_bytes_50M_16clients"]
+    assert any("wire_bytes_50M_16clients" in p
+               for p in compare_rows(base, gone, 0.15))
+    skipped = json.loads(json.dumps(base))
+    skipped["wire_codec_convergence"] = _row(us=0, skipped="crash")
+    assert any("wire_codec_convergence" in p
+               for p in compare_rows(base, skipped, 0.15))
+
+
+def test_ungated_timing_rows_never_flag():
+    new = _baseline()
+    new["straggler_overlap_4clients"]["derived"]["round_over_delta"] = 9.9
+    assert compare_rows(_baseline(), new, 0.15) == []
+
+
+def test_rows_from_csv_roundtrip():
+    csv = (
+        "name,us_per_call,derived\n"
+        "some log line\n"
+        "agg_throughput_50M_16clients,123456,"
+        "mbps=4500;speedup_vs_legacy=7.80x;match=True\n"
+        "wire_bytes_50M_16clients,1000,reduction=3.98x;match_tol=True\n"
+        "kernel_flash_attention,42,interpret_mode;flops=1.34e+08\n")
+    rows = rows_from_csv(csv)
+    assert rows["agg_throughput_50M_16clients"]["derived"] == {
+        "mbps": 4500.0, "speedup_vs_legacy": 7.8, "match": True}
+    assert rows["wire_bytes_50M_16clients"]["derived"]["reduction"] == 3.98
+    assert rows["kernel_flash_attention"]["derived"]["interpret_mode"] is True
+    assert "name" not in rows and "some log line" not in rows
+
+
+def test_cli_end_to_end(tmp_path):
+    base_p = tmp_path / "BENCH_baseline.json"
+    good_p = tmp_path / "BENCH_good.json"
+    bad_p = tmp_path / "BENCH_doctored.json"
+    base_p.write_text(json.dumps({"schema": 1, "rows": _baseline()}))
+    good_p.write_text(json.dumps({"schema": 1, "rows": _baseline()}))
+    doctored = _baseline()
+    doctored["agg_throughput_50M_16clients"]["derived"]["mbps"] = 3000.0
+    bad_p.write_text(json.dumps({"schema": 1, "rows": doctored}))
+    assert main([str(good_p), "--baseline", str(base_p)]) == 0
+    assert main([str(bad_p), "--baseline", str(base_p)]) == 1
+
+
+def test_committed_baseline_loads_and_gates_itself():
+    """The repo's own baseline must parse and pass against itself."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_baseline.json")
+    if not os.path.exists(path):
+        pytest.skip("baseline not generated yet")
+    rows = load_rows(path)
+    assert any(n.startswith("agg_throughput_") for n in rows)
+    assert "wire_bytes_50M_16clients" in rows
+    assert rows["wire_bytes_50M_16clients"]["derived"]["reduction"] >= 3.5
+    assert compare_rows(rows, rows, 0.15) == []
