@@ -6,14 +6,19 @@ when the trajectory regresses:
 
 - any ``agg_throughput_*`` / ``quantized_agg_*`` row whose ``mbps`` or
   ``speedup_vs_legacy`` drops more than ``--threshold`` (default 15%, env
-  ``BENCH_REGRESSION_THRESHOLD``) below the baseline;
+  ``BENCH_REGRESSION_THRESHOLD``) below the baseline; ``pallas_agg_*``
+  rows are gated on presence and their match flags only — their
+  ``interp_mbps`` is interpret-mode (trace-overhead-bound) timing, which
+  the trajectory deliberately does not hold;
 - a gated row (including ``wire_bytes_*`` / ``wire_codec_convergence``)
   present and unskipped in the baseline but missing/skipped in the new
   snapshot — a bench that starts crashing or OOMing must not silently
   retire its own checks;
 - any correctness flag (``match`` / ``match_tol`` / ``bitwise_match`` /
-  ``within_tol``) that is not True in the new snapshot — equivalence is
-  part of the trajectory, a fast-but-wrong kernel must fail loudly;
+  ``within_tol`` / ``q8_match``) that is not True in the new snapshot —
+  equivalence is part of the trajectory, a fast-but-wrong kernel must
+  fail loudly (for ``pallas_agg_*`` the flags ARE the differential
+  Pallas-vs-numpy cross-check, run on the benchmark payload sizes);
 - ``wire_bytes_*`` rows whose payload ``reduction`` falls below the 3.5x
   floor the quantized wire format promises.
 
@@ -39,12 +44,13 @@ from typing import Dict, List
 #: (wire_bytes_* / wire_codec_convergence carry no gated numeric field,
 #: but losing them would silently drop the 3.5x-reduction and
 #: convergence checks below)
-GATED_PREFIXES = ("agg_throughput_", "quantized_agg_", "wire_bytes_",
-                  "wire_codec_convergence")
+GATED_PREFIXES = ("agg_throughput_", "quantized_agg_", "pallas_agg_",
+                  "wire_bytes_", "wire_codec_convergence")
 #: higher-is-better derived fields compared under the threshold
 GATED_FIELDS = ("mbps", "speedup_vs_legacy")
 #: boolean derived fields that must hold wherever they appear
-INVARIANT_FLAGS = ("match", "match_tol", "bitwise_match", "within_tol")
+INVARIANT_FLAGS = ("match", "match_tol", "bitwise_match", "within_tol",
+                   "q8_match")
 #: wire_bytes_* rows must keep at least this payload reduction vs fp32
 MIN_WIRE_REDUCTION = 3.5
 

@@ -22,6 +22,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          equivalence of the aggregated round)
   quantized_agg_*        fused dequantize+accumulate aggregation straight
                          off the compressed buffers (derived = MB/s)
+  pallas_agg_*           Pallas on-device aggregation kernels (interpret
+                         mode on CPU) vs the numpy engine on identical
+                         payloads; derived = MB/s + bitwise match (and
+                         the fused int8-delta path's q8_match on the
+                         small rows)
   wire_codec_convergence negotiated q8 vs flat on the quickstart task
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
@@ -345,6 +350,80 @@ def bench_agg_throughput(quick=False):
     _CASE_CACHE.clear()
 
 
+def _pallas_agg_case(label, n_params, n_clients, with_q8):
+    """Pallas aggregation kernels (interpret mode on this CPU container)
+    vs the numpy engine on identical decoded payloads.  ``match`` is
+    bitwise equality of the aggregated model; ``q8_match`` additionally
+    runs the fused int8-delta path on the small rows."""
+    from repro.fl import agg_kernels as K
+    from repro.fl.flat import QuantParams, quantize_int8
+    from repro.fl.messages import decode_fit_res
+
+    case = _case_data(label, n_params, with_legacy=False)
+    payload = case["flat"]
+    nbytes = case["nbytes"]
+    weights = [10.0 + i for i in range(n_clients)]
+    pairs = [(decode_fit_res(payload).flat, w) for w in weights]
+    layout = pairs[0][0].layout
+    # a block that divides the buffer exactly skips the full-array pad
+    # copy inside agg_reduce — at 50M x 16 that copy alone is ~3.4 GB
+    n = layout.total_size
+    block = n // 64 if n % 64 == 0 and n // 64 >= 8192 else None
+
+    t0 = time.perf_counter()
+    out_p = K.weighted_mean(pairs, layout, backend="pallas", block=block)
+    t_pallas = time.perf_counter() - t0
+    out_n = K.weighted_mean(pairs, layout, backend="numpy")
+    match = bool(np.array_equal(out_p.buf, out_n.buf))
+    # interp_mbps (NOT the gated "mbps" field): interpret-mode throughput
+    # is trace/compile-overhead-bound and varies run to run — the gate
+    # holds the row's presence and its match flags, not this number
+    derived = (f"interp_mbps={nbytes * n_clients / t_pallas / 1e6:.0f};"
+               f"match={match};interpret_mode")
+
+    if with_q8:
+        base = decode_fit_res(payload).flat
+        rng = np.random.default_rng(17)
+        quants = []
+        for i in range(n_clients):
+            delta = rng.normal(0, 1e-3, layout.total_size) \
+                .astype(np.float32)
+            q, s = quantize_int8(delta)
+            quants.append(QuantParams(layout, "q8", q, s, is_delta=True,
+                                      base=base))
+        qpairs = list(zip(quants, weights))
+        qp = K.weighted_mean(qpairs, layout, backend="pallas")
+        qn = K.weighted_mean(qpairs, layout, backend="numpy")
+        derived += f";q8_match={bool(np.array_equal(qp.buf, qn.buf))}"
+    print(f"pallas_agg_{label}_{n_clients}clients,{t_pallas * 1e6:.0f},"
+          f"{derived}")
+
+
+def bench_pallas_agg(quick=False):
+    # grouped by label like bench_agg_throughput so _CASE_CACHE's single
+    # entry is reused instead of re-encoded per client count; the fused
+    # q8 path only rides the 1M rows (quantizing 50M per client would
+    # dominate the lane without exercising anything new)
+    cases = [("1M", 1_000_000, 4, True), ("1M", 1_000_000, 16, True)]
+    if not quick:
+        cases += [("50M", 50_000_000, 4, False)]
+    cases += [("50M", 50_000_000, 16, False)]
+    for label, n_params, n_clients, with_q8 in cases:
+        try:
+            _pallas_agg_case(label, n_params, n_clients, with_q8)
+        except Exception as e:  # noqa: BLE001 — see the re-raise below
+            # jax-side allocation failure surfaces as XlaRuntimeError
+            # RESOURCE_EXHAUSTED, not MemoryError — both mean "this host
+            # is too small", which must become a visible skipped row, not
+            # a dead benchmark run with no snapshot
+            if not (isinstance(e, MemoryError)
+                    or "RESOURCE_EXHAUSTED" in str(e)
+                    or "Out of memory" in str(e)):
+                raise
+            print(f"pallas_agg_{label}_{n_clients}clients,0,skipped=oom")
+    _CASE_CACHE.clear()
+
+
 def _wire_case(label, n_params, n_clients):
     """Quantized wire format (0xF3 int8 + per-chunk scales) vs raw fp32:
     per-round payload bytes both directions, plus the fused
@@ -624,6 +703,7 @@ def main() -> None:
         bench_secagg(args.quick)
         bench_kernels(args.quick)
         bench_agg_throughput(args.quick)
+        bench_pallas_agg(args.quick)
         bench_wire_codecs(args.quick)
         bench_wire_convergence(args.quick)
         bench_straggler_overlap(args.quick)

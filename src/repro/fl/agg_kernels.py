@@ -33,10 +33,35 @@ CHUNK-sized fp64 scratch, never a model-size fp32 copy of the payload.
 NB (numpy>=2 / NEP 50): scalar weights MUST be ``np.float64`` — a bare
 python float is "weak" and would demote the multiply to the fp32 loop,
 silently breaking the exactness guarantee.
+
+Backend dispatch
+----------------
+Every public kernel takes ``backend="numpy" | "pallas" | None`` (None /
+"auto" resolves to :func:`default_backend`: the Pallas path on TPU hosts,
+numpy everywhere else — overridable with ``REPRO_AGG_BACKEND`` or
+:func:`set_default_backend`).  The contract:
+
+- the numpy path is the reference and the default off-TPU; its arithmetic
+  is frozen (the fig. 5 bitwise-repro claim rides on it);
+- the Pallas path (:mod:`repro.kernels.agg_reduce`) must agree with it to
+  <=1 ULP of the output leaf dtype for every (kernel, codec) pair — it is
+  bitwise in practice, and `tests/test_agg_pallas.py` enforces the bound
+  across layouts, dtypes, codecs (0xF1/0xF2/0xF3 incl. int8 deltas) and
+  client counts.  Krum's Gram matmul reduction order is hardware-defined,
+  so its *distances* carry a tight relative tolerance instead while the
+  selection and the aggregate stay exact;
+- off-TPU the Pallas kernels run in interpret mode, so CI exercises the
+  real kernel bodies on CPU;
+- payload stacks the Pallas kernels cannot express fall back to numpy
+  silently: non-float domains (SecAgg uint64 shares), clients with
+  heterogeneous codecs/dtypes in one round, mismatched int8 scale
+  windows, or delta payloads with more than one distinct base.  Fallback
+  is per-call, so a single odd client never aborts a round.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+import os
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -48,9 +73,114 @@ CHUNK = 1 << 14
 
 _FLOATS = {"float16", "float32", "float64"}
 
+# ---------------------------------------------------------------------------
+# backend selection
+# ---------------------------------------------------------------------------
+BACKENDS = ("numpy", "pallas")
+_DEFAULT_BACKEND: Optional[str] = None
+
+
+def default_backend() -> str:
+    """Resolved process default: ``REPRO_AGG_BACKEND`` if set, else
+    "pallas" when a TPU is attached, else "numpy"."""
+    global _DEFAULT_BACKEND
+    if _DEFAULT_BACKEND is None:
+        env = os.environ.get("REPRO_AGG_BACKEND", "").strip().lower()
+        if env:
+            if env not in BACKENDS:
+                raise ValueError(
+                    f"REPRO_AGG_BACKEND={env!r}; expected one of {BACKENDS}")
+            _DEFAULT_BACKEND = env
+        else:
+            _DEFAULT_BACKEND = "pallas" if _on_tpu() else "numpy"
+    return _DEFAULT_BACKEND
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Override (or with ``None`` re-derive) the process default."""
+    global _DEFAULT_BACKEND
+    if name is not None and name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; have {BACKENDS}")
+    _DEFAULT_BACKEND = name
+
+
+def _on_tpu() -> bool:
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:  # noqa: BLE001 — no jax, no accelerator
+        return False
+
+
+def resolve_backend(backend: Optional[str]) -> str:
+    if backend in (None, "auto"):
+        return default_backend()
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; have {BACKENDS}")
+    return backend
+
+
+def _interpret() -> bool:
+    # off-TPU the kernel bodies execute in interpret mode (CPU CI)
+    return not _on_tpu()
+
+
+def _tile_stack(flats: Sequence) -> Optional[Dict[str, Any]]:
+    """Stack per-client :class:`~repro.fl.flat.TileSource` adapters into
+    the (C, N) host arrays the Pallas kernels consume, or ``None`` when
+    the round must fall back to numpy (see module docstring)."""
+    sources = []
+    for fp in flats:
+        ts = getattr(fp, "tile_source", None)
+        src = ts() if ts is not None else None
+        if src is None:
+            return None
+        sources.append(src)
+    first = sources[0]
+    if any(s.kind != first.kind for s in sources):
+        return None
+    bases = {id(s.base): s.base for s in sources}
+    if len(bases) > 1:
+        return None
+    base_obj = next(iter(bases.values()))
+    base = base_obj.to_f64() if base_obj is not None else None
+    if first.kind == "q8":
+        if any(s.qchunk != first.qchunk for s in sources):
+            return None
+        return {"data": np.stack([s.data for s in sources]),
+                "scales": np.stack([s.scales for s in sources]),
+                "qchunk": first.qchunk, "base": base}
+    if any(s.data.dtype != first.data.dtype for s in sources):
+        return None
+    return {"data": np.stack([s.data for s in sources]), "scales": None,
+            "qchunk": 1, "base": base}
+
+
+def _scatter_leaves(vec: np.ndarray, layout: Layout,
+                    out: FlatParams) -> None:
+    """Write a full math vector into ``out`` leaf by leaf, casting to each
+    leaf's dtype — the one shared rounding path for every kernel's
+    non-uniform (or vector-producing) output."""
+    for i, spec in enumerate(layout.leaves):
+        out.leaf(i)[...] = vec[spec.eoffset:spec.eoffset + spec.size] \
+            .reshape(spec.shape).astype(np_dtype(spec.dtype))
+
+
+def _vec_to_flat(vec: np.ndarray, layout: Layout) -> FlatParams:
+    """fp64 math vector -> FlatParams, with the same per-element rounding
+    the numpy kernels apply when writing their output chunks."""
+    out = FlatParams.zeros(layout)
+    if layout.uniform_dtype in _FLOATS:
+        out.math_view()[...] = vec
+    else:
+        _scatter_leaves(vec, layout, out)
+    return out
+
 
 def weighted_mean(pairs: Sequence[Tuple[FlatParams, float]],
-                  layout: Layout) -> FlatParams:
+                  layout: Layout, backend: Optional[str] = None,
+                  block: Optional[int] = None) -> FlatParams:
     """sum((w_i / W) x_i) over flat buffers -> FlatParams of ``layout``.
 
     Chunk-outer / client-inner: the fp64 accumulator chunk is reused across
@@ -63,6 +193,16 @@ def weighted_mean(pairs: Sequence[Tuple[FlatParams, float]],
     n = layout.total_size
     if n == 0 or not pairs:
         return out
+    if resolve_backend(backend) == "pallas":
+        stack = _tile_stack([fp for fp, _ in pairs])
+        if stack is not None:
+            from repro.kernels import agg_reduce
+
+            vec = agg_reduce.weighted_sum(
+                stack["data"], np.array(scaled, np.float64),
+                scales=stack["scales"], qchunk=stack["qchunk"],
+                base=stack["base"], block=block, interpret=_interpret())
+            return _vec_to_flat(vec, layout)
     uniform = layout.uniform_dtype in _FLOATS
     ovec = out.math_view() if uniform else np.empty(n, np.float64)
     acc = np.empty(CHUNK, np.float64)
@@ -79,17 +219,31 @@ def weighted_mean(pairs: Sequence[Tuple[FlatParams, float]],
             a += scratch[:hi - lo]
         ovec[lo:hi] = a
     if not uniform:
-        for i, spec in enumerate(layout.leaves):
-            out.leaf(i)[...] = ovec[spec.eoffset:spec.eoffset + spec.size] \
-                .reshape(spec.shape).astype(np_dtype(spec.dtype))
+        _scatter_leaves(ovec, layout, out)
     return out
 
 
 class StreamingWeightedSum:
-    """Incremental sum(w_i x_i); finalize() divides by W and casts."""
+    """Incremental sum(w_i x_i); finalize() divides by W and casts.
 
-    def __init__(self, layout: Layout):
+    On the Pallas backend each arriving payload folds in through one
+    fused dequantize+scale+accumulate kernel launch, so device reduction
+    overlaps the stragglers' compute (the numpy fold is the bitwise
+    reference and the fallback for payloads the kernels cannot express —
+    a mixed round may fold through both, which is still exact because the
+    per-arrival arithmetic is identical).  The accumulator stays
+    *unpadded* between arrivals: block geometry depends on each payload's
+    codec (qchunk alignment), so a persistent padded accumulator would
+    only be valid for codec-homogeneous rounds — the per-arrival
+    pad+slice is the price of accepting mixed arrivals."""
+
+    def __init__(self, layout: Layout, backend: Optional[str] = None,
+                 block: Optional[int] = None):
         self.layout = layout
+        self.backend = resolve_backend(backend)
+        self._block = block
+        # id(base) -> (base object, its fp64 materialization)
+        self._base_memo: Dict[int, Tuple[Any, np.ndarray]] = {}
         self._acc = np.zeros(layout.total_size, np.float64)
         self._scratch = np.empty(min(CHUNK, max(layout.total_size, 1)),
                                  np.float64)
@@ -98,6 +252,11 @@ class StreamingWeightedSum:
         self.count = 0
 
     def add(self, fp: FlatParams, w: float) -> None:
+        if self.backend == "pallas" and self.layout.total_size \
+                and self._add_pallas(fp, w):
+            self.total_w += float(w)
+            self.count += 1
+            return
         sw = np.float64(w)
         n = self.layout.total_size
         for lo in range(0, n, CHUNK):
@@ -108,13 +267,34 @@ class StreamingWeightedSum:
         self.total_w += float(w)
         self.count += 1
 
+    def _add_pallas(self, fp, w: float) -> bool:
+        ts = getattr(fp, "tile_source", None)
+        src = ts() if ts is not None else None
+        if src is None:
+            return False
+        base = None
+        if src.base is not None:
+            # the memo entry keeps the base OBJECT alive: a bare id() key
+            # could be reused by a different base after gc
+            hit = self._base_memo.get(id(src.base))
+            if hit is not None and hit[0] is src.base:
+                base = hit[1]
+            else:
+                base = src.base.to_f64()
+                self._base_memo[id(src.base)] = (src.base, base)
+        from repro.kernels import agg_reduce
+
+        self._acc = agg_reduce.weighted_sum(
+            src.data[None, :], np.array([w], np.float64),
+            scales=None if src.scales is None else src.scales[None, :],
+            qchunk=src.qchunk, base=base, acc=self._acc,
+            block=self._block, interpret=_interpret())
+        return True
+
     def finalize(self) -> FlatParams:
         self._acc *= np.float64(1.0 / self.total_w)
         out = FlatParams.zeros(self.layout)
-        for i, spec in enumerate(self.layout.leaves):
-            seg = self._acc[spec.eoffset:spec.eoffset + spec.size]
-            out.leaf(i)[...] = seg.reshape(spec.shape) \
-                .astype(np_dtype(spec.dtype))
+        _scatter_leaves(self._acc, self.layout, out)
         return out
 
 
@@ -126,16 +306,50 @@ def _rowstack(flats: Sequence[FlatParams], lo: int, hi: int,
     return tile
 
 
-def median(flats: Sequence[FlatParams], layout: Layout) -> FlatParams:
+def _sorted_reduce_pallas(flats, layout, kind: str, trim_k: int,
+                          block: Optional[int]) -> Optional[FlatParams]:
+    """Shared Pallas branch of the sort-based reductions; ``None`` means
+    "fall back to numpy" (unsupported payload stack)."""
+    stack = _tile_stack(flats)
+    if stack is None:
+        return None
+    from repro.kernels import agg_reduce
+
+    vec = agg_reduce.sort_reduce(
+        stack["data"], kind=kind, trim_k=trim_k, scales=stack["scales"],
+        qchunk=stack["qchunk"], base=stack["base"], block=block,
+        interpret=_interpret())
+    if kind == "trim_sum":
+        # numpy's np.mean = sum of rows, then one true divide — doing the
+        # divide host-side keeps the rounding identical
+        vec /= len(flats) - 2 * trim_k
+    return _vec_to_flat(vec, layout)
+
+
+def median(flats: Sequence[FlatParams], layout: Layout,
+           backend: Optional[str] = None,
+           block: Optional[int] = None) -> FlatParams:
     """Coordinate-wise median, chunk-stacked."""
+    if layout.total_size and flats \
+            and resolve_backend(backend) == "pallas":
+        out = _sorted_reduce_pallas(flats, layout, "median", 0, block)
+        if out is not None:
+            return out
     return _coordinatewise(flats, layout,
                            lambda t: np.median(t, axis=0, overwrite_input=True))
 
 
 def trimmed_mean(flats: Sequence[FlatParams], layout: Layout,
-                 k: int) -> FlatParams:
+                 k: int, backend: Optional[str] = None,
+                 block: Optional[int] = None) -> FlatParams:
     """Mean after trimming the k smallest/largest values per coordinate."""
     n = len(flats)
+    if layout.total_size and flats \
+            and resolve_backend(backend) == "pallas":
+        k_eff = k if n > 2 * k else 0
+        out = _sorted_reduce_pallas(flats, layout, "trim_sum", k_eff, block)
+        if out is not None:
+            return out
 
     def reduce(tile: np.ndarray) -> np.ndarray:
         tile.sort(axis=0)
@@ -157,13 +371,13 @@ def _coordinatewise(flats, layout, reduce_fn) -> FlatParams:
         hi = min(lo + CHUNK, n)
         ovec[lo:hi] = reduce_fn(_rowstack(flats, lo, hi, m))
     if not uniform:
-        for i, spec in enumerate(layout.leaves):
-            out.leaf(i)[...] = ovec[spec.eoffset:spec.eoffset + spec.size] \
-                .reshape(spec.shape).astype(np_dtype(spec.dtype))
+        _scatter_leaves(ovec, layout, out)
     return out
 
 
-def krum_distances(flats: Sequence[FlatParams], layout: Layout) -> np.ndarray:
+def krum_distances(flats: Sequence[FlatParams], layout: Layout,
+                   backend: Optional[str] = None,
+                   block: Optional[int] = None) -> np.ndarray:
     """(n, n) matrix of pairwise squared L2 distances.
 
     Accumulates the Gram matrix G += X_c X_c^T one (n, CHUNK) fp64 tile at
@@ -175,6 +389,20 @@ def krum_distances(flats: Sequence[FlatParams], layout: Layout) -> np.ndarray:
     residual rounding.
     """
     n_clients = len(flats)
+    if layout.total_size and flats \
+            and resolve_backend(backend) == "pallas":
+        stack = _tile_stack(flats)
+        if stack is not None:
+            from repro.kernels import agg_reduce
+
+            G = agg_reduce.gram(
+                stack["data"], scales=stack["scales"],
+                qchunk=stack["qchunk"], base=stack["base"], block=block,
+                interpret=_interpret())
+            sq = np.diag(G).copy()
+            D = sq[:, None] + sq[None, :] - 2.0 * G
+            np.maximum(D, 0.0, out=D)
+            return D
     G = np.zeros((n_clients, n_clients), np.float64)
     m = np.empty((n_clients, CHUNK), np.float64)
     ref = np.empty(CHUNK, np.float64)

@@ -196,6 +196,41 @@ class FlatParams:
     def nbytes(self) -> int:
         return self.layout.total_bytes
 
+    def tile_source(self) -> Optional["TileSource"]:
+        """Adapter for the Pallas aggregation backend; ``None`` when this
+        payload must stay on the numpy kernels (integer domains, e.g.
+        SecAgg's uint64 shares)."""
+        u = self.layout.uniform_dtype
+        if u is None:
+            # mixed dtypes: one fp64 materialization — the same values
+            # f64_chunk streams, so the fused kernels stay bitwise
+            return TileSource("float", self.to_f64())
+        if u in ("float16", "float32", "float64", "bfloat16"):
+            return TileSource("float", self.math_view())
+        return None
+
+
+@dataclass
+class TileSource:
+    """Chunk -> tile adapter: the raw typed arrays a payload contributes
+    to a stacked (clients, N) device tile (see
+    :mod:`repro.kernels.agg_reduce`).
+
+    ``kind="float"``: ``data`` is the (N,) fp16/fp32/fp64/bf16 vector
+    (zero-copy for uniform layouts; mixed-dtype layouts materialize one
+    fp64 vector — exactly the values ``f64_chunk`` would stream).
+    ``kind="q8"``: ``data`` is the (N,) int8 payload and ``scales`` the
+    per-``qchunk`` fp32 scales.  ``base`` carries the *object* (FlatParams
+    or QuantParams) a delta payload reconstructs against; the dispatch
+    layer materializes it to fp64 once per distinct base, not per client.
+    """
+
+    kind: str                            # "float" | "q8"
+    data: np.ndarray
+    scales: Optional[np.ndarray] = None
+    qchunk: int = 1024
+    base: Optional[object] = None
+
 
 def unflatten_vector(vec: np.ndarray, layout: Layout) -> NDArrays:
     """Split a math vector back into leaves, cast to each leaf's dtype."""
@@ -380,3 +415,15 @@ class QuantParams:
     def nbytes(self) -> int:
         return int(self.data.nbytes
                    + (self.scales.nbytes if self.scales is not None else 0))
+
+    def tile_source(self) -> Optional[TileSource]:
+        """Adapter for the Pallas aggregation backend: the still-compressed
+        wire arrays, so the dequantize stays fused in the kernel.  A delta
+        payload whose base is not attached yet returns ``None`` — the
+        numpy path then raises its explanatory error."""
+        if self.is_delta and self.base is None:
+            return None
+        base = self.base if self.is_delta else None
+        if self.mode == "bf16":
+            return TileSource("float", self.data, base=base)
+        return TileSource("q8", self.data, self.scales, self.qchunk, base)

@@ -37,6 +37,12 @@ class ServerConfig:
     # get_properties; otherwise the run demotes to "flat" (see
     # repro.fl.messages module docstring, "Codec negotiation").
     codec: Optional[str] = None
+    # aggregation kernel backend for the strategy ("numpy" | "pallas" |
+    # None = auto: Pallas on TPU hosts, numpy elsewhere).  Applied to the
+    # strategy at app construction so streaming arrival-order
+    # accumulation folds through the fused device kernels (see
+    # repro.fl.agg_kernels "Backend dispatch").
+    agg_backend: Optional[str] = None
 
 
 class Driver:
@@ -101,6 +107,8 @@ class ServerApp:
     def __init__(self, config: ServerConfig, strategy: Strategy):
         self.config = config
         self.strategy = strategy
+        if config.agg_backend is not None and hasattr(strategy, "backend"):
+            strategy.backend = config.agg_backend
 
     @staticmethod
     def _memo_encode(memo: Dict[Any, bytes], ins, enc_fn,

@@ -180,7 +180,8 @@ class _WeightedFitAcc(FitAccumulator):
             # accumulator (invisible after the fp32 cast) — documented
             # trade for O(1)-model-size peak memory
             if self._streaming is None:
-                self._streaming = kernels.StreamingWeightedSum(fp.layout)
+                self._streaming = kernels.StreamingWeightedSum(
+                    fp.layout, backend=self.strategy.backend)
             self._streaming.add(fp, w)      # payload is droppable after this
         else:
             self.pairs.append((node, fp, w))
@@ -200,7 +201,8 @@ class _WeightedFitAcc(FitAccumulator):
             # canonical node order -> aggregate independent of arrival order
             self.pairs.sort(key=lambda p: p[0])
             pairs = [(fp, w) for _, fp, w in self.pairs]
-            target = kernels.weighted_mean(pairs, pairs[0][0].layout)
+            target = kernels.weighted_mean(pairs, pairs[0][0].layout,
+                                           backend=st.backend)
         metrics = {"num_clients": self._count}
         return st._server_opt(self.rnd, target, self.current), metrics
 
@@ -217,6 +219,11 @@ class FedAvg(Strategy):
     # population (Krum additionally floors it at 2f+3).
     min_available: int = 0
     low_memory: bool = False
+    # aggregation kernel backend: "numpy" | "pallas" | None (auto — the
+    # Pallas path on TPU hosts, numpy elsewhere; see
+    # repro.fl.agg_kernels "Backend dispatch").  ServerConfig.agg_backend
+    # sets it fleet-wide without touching strategy construction.
+    backend: Optional[str] = None
 
     def quorum(self) -> int:
         return max(self.min_fit_clients, self.min_available, 1)
@@ -361,7 +368,7 @@ class _StackedStrategyMixin:
 @dataclass
 class FedMedian(_StackedStrategyMixin, FedAvg):
     def _aggregate_flats(self, rnd, flats, weights, failures, nodes=None):
-        out = kernels.median(flats, flats[0].layout)
+        out = kernels.median(flats, flats[0].layout, backend=self.backend)
         return out.to_arrays(), {"num_clients": len(flats)}
 
 
@@ -371,7 +378,8 @@ class FedTrimmedMean(_StackedStrategyMixin, FedAvg):
 
     def _aggregate_flats(self, rnd, flats, weights, failures, nodes=None):
         k = int(self.beta * len(flats))
-        out = kernels.trimmed_mean(flats, flats[0].layout, k)
+        out = kernels.trimmed_mean(flats, flats[0].layout, k,
+                                   backend=self.backend)
         return out.to_arrays(), {"num_clients": len(flats),
                                  "trimmed_each_end": k}
 
@@ -394,11 +402,11 @@ class Krum(_StackedStrategyMixin, FedAvg):
 
     def _aggregate_flats(self, rnd, flats, weights, failures, nodes=None):
         layout = flats[0].layout
-        D = kernels.krum_distances(flats, layout)
+        D = kernels.krum_distances(flats, layout, backend=self.backend)
         scores = kernels.krum_scores(D, self.num_byzantine)
         chosen = np.argsort(scores)[: max(self.num_selected, 1)]
         sel = [(flats[i], weights[i]) for i in chosen]
-        out = kernels.weighted_mean(sel, layout)
+        out = kernels.weighted_mean(sel, layout, backend=self.backend)
         # report node ids, not positions: positions depend on arrival order
         picked = ([nodes[i] for i in chosen] if nodes is not None
                   else [int(c) for c in chosen])

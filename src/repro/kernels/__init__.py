@@ -9,6 +9,11 @@ a jit'd public wrapper in ``ops.py``:
   secure aggregation — the elementwise hot path of every FL upload.
 - ``rglru_scan``: chunked RG-LRU linear recurrence h_t = a_t*h_{t-1} + b_t.
 
+Plus ``agg_reduce``: the server-side aggregation reductions (fused
+weighted sum, sorted median/trimmed tiles, Krum Gram matrix) over flat
+parameter buffers, differential-tested bitwise against the numpy kernels
+in :mod:`repro.fl.agg_kernels` (its reference path and dispatch layer).
+
 This container is CPU-only: kernels are VALIDATED with
 ``pl.pallas_call(..., interpret=True)`` which executes the kernel body in
 Python; the BlockSpecs/grids are written for real TPU execution.

@@ -1,0 +1,319 @@
+"""Pallas TPU kernels for flat-buffer FL aggregation (one pass over HBM).
+
+The numpy kernels in :mod:`repro.fl.agg_kernels` stream every client's
+payload through an L2-blocked fp64 accumulator.  On TPU the same
+reductions become Pallas grid kernels over the (clients x total_params)
+logical matrix, one column-block per grid step, with the wire decode
+**fused into the tile read**:
+
+- :func:`weighted_sum` — FedAvg's sum(w_i * x_i) (optionally continuing a
+  running accumulator, the streaming arrival-order fold).  Per block:
+  dequantize(+delta-base) + scale into an fp32->fp64 tile, then fold the
+  client rows sequentially.
+- :func:`sort_reduce` — coordinate-wise median / trimmed sum on the
+  sorted (clients, block) tile (the host divides a trimmed *sum* by the
+  row count so the final divide matches numpy's ``np.mean`` bitwise).
+- :func:`gram` — the Krum Gram matrix: each tile is centered on its first
+  row and accumulated as ``G += t @ t.T`` across grid steps (MXU matmul,
+  fp64 accumulation).
+
+Inputs arrive as already-stacked host arrays (see
+``FlatParams.tile_source`` / ``QuantParams.tile_source`` — the chunk->tile
+adapters): ``data`` is (clients, N) in the wire dtype (fp32/bf16/fp64 or
+int8), ``scales`` the per-``qchunk`` fp32 scales for int8 payloads, and
+``base`` the shared fp64 round-start vector for delta payloads.
+
+Exactness contract (what `tests/test_agg_pallas.py` pins): every kernel
+reproduces the numpy reference **bitwise** (<=1 ULP guaranteed, 0
+observed) except the Gram matrix, whose matmul reduction order is
+hardware-defined.  Two implementation details make that possible and must
+not be "simplified" away:
+
+- accumulation happens in a ``fori_loop`` whose trip count is a *runtime
+  scalar* (``n_ref``).  XLA:CPU compiles fused elementwise graphs with
+  LLVM fast-math, which contracts ``a*b + c`` into FMA and reassociates
+  unrolled add chains — up to ~1.5k fp64 ULP of drift under cancellation.
+  A while loop with a dynamic trip count cannot be unrolled, so the
+  multiply (materialized before the loop) and each add (one per
+  iteration) round exactly like the numpy fold.
+- int8 dequantization multiplies in fp32 and widens afterwards:
+  ``f64(f32(q * scale))`` is bitwise the numpy ``_dequant_q8`` chain
+  (the exact product fits fp64, then rounds through fp32 once).
+
+This container is CPU-only: kernels are validated with
+``pl.pallas_call(..., interpret=True)`` (fp64 under a scoped
+``jax.experimental.enable_x64``); the BlockSpecs/grids are the TPU
+configuration under test.  On real TPUs fp64 VPU throughput is emulated —
+the production plan (ROADMAP "sharded server state") is fp32 tiles with
+fp64 carry, which keeps the same kernel structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.experimental
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_QCHUNK = 1024
+#: auto block sizing keeps the 1-D grid at most this long — interpret mode
+#: replays the kernel body once per grid step, so a 50M-element buffer
+#: must not become thousands of steps (on TPU the same bound keeps the
+#: per-step DMA large enough to hide latency)
+_MAX_GRID = 64
+_MIN_BLOCK = 8192
+_MAX_BLOCK = 1 << 21
+
+
+def choose_block(n: int, qchunk: int = 1) -> int:
+    """Column-block size: a multiple of ``qchunk`` (int8 scale windows
+    never straddle blocks) with at most ``_MAX_GRID`` grid steps."""
+    blk = -(-_MIN_BLOCK // qchunk) * qchunk
+    while blk * _MAX_GRID < n and blk < _MAX_BLOCK:
+        blk *= 2
+    return blk
+
+
+def _pad_cols(a: np.ndarray, total: int, fill=0) -> np.ndarray:
+    """Zero/fill-pad the last axis out to ``total`` columns."""
+    if a.shape[-1] == total:
+        return a
+    out = np.full(a.shape[:-1] + (total,), fill, a.dtype)
+    out[..., : a.shape[-1]] = a
+    return out
+
+
+def _decode_tile(d_ref, s_ref, b_ref, *, qchunk: int) -> jnp.ndarray:
+    """The fused wire decode: (C, blk) wire-dtype tile -> fp64.
+
+    int8 payloads dequantize through fp32 (one rounding, matching the
+    numpy ``_dequant_q8`` chain bitwise); float payloads widen exactly.
+    A delta payload's shared round base is added in fp64 afterwards, like
+    ``QuantParams.f64_chunk``.
+    """
+    raw = d_ref[...]
+    if raw.dtype == jnp.int8:
+        c, blk = raw.shape
+        dq = (raw.astype(jnp.float32).reshape(c, blk // qchunk, qchunk)
+              * s_ref[...][:, :, None]).reshape(c, blk)
+        t = dq.astype(jnp.float64)
+    else:
+        t = raw.astype(jnp.float64)
+    if b_ref is not None:
+        t = t + b_ref[...][None, :]
+    return t
+
+
+def _assemble(data: np.ndarray, *, lead: int,
+              scales: Optional[np.ndarray], qchunk: int,
+              base: Optional[np.ndarray], acc: Optional[np.ndarray],
+              block: Optional[int]):
+    """Shared grid assembly for all three kernels: pick the block, pad
+    every operand to a whole number of blocks, and build the (args,
+    in_specs) lists in the order :func:`_unpack` consumes them —
+    ``(lead scalar, [acc], data, [scales], [base])``.  Returns
+    ``(blk, total, args, specs)``; callers append their tail operands.
+    """
+    c, n = data.shape
+    q8 = data.dtype == np.int8
+    blk = block or choose_block(n, qchunk if q8 else 1)
+    if q8:
+        blk = -(-blk // qchunk) * qchunk
+    total = -(-n // blk) * blk
+    args = [np.array([lead], np.int32)]
+    specs = [pl.BlockSpec((1,), lambda i: (0,))]
+    if acc is not None:
+        args.append(_pad_cols(np.asarray(acc, np.float64), total))
+        specs.append(pl.BlockSpec((blk,), lambda i: (i,)))
+    args.append(_pad_cols(data, total))
+    specs.append(pl.BlockSpec((c, blk), lambda i: (0, i)))
+    if q8:
+        args.append(_pad_cols(np.asarray(scales, np.float32),
+                              total // qchunk, fill=1))
+        specs.append(pl.BlockSpec((c, blk // qchunk), lambda i: (0, i)))
+    if base is not None:
+        args.append(_pad_cols(np.asarray(base, np.float64), total))
+        specs.append(pl.BlockSpec((blk,), lambda i: (i,)))
+    return blk, total, args, specs
+
+
+def _unpack(refs, *, q8: bool, has_base: bool, extra: int):
+    """(n_ref, [acc/extra...], data, [scales], [base], tail...)"""
+    it = iter(refs)
+    n_ref = next(it)
+    head = [next(it) for _ in range(extra)]
+    d_ref = next(it)
+    s_ref = next(it) if q8 else None
+    b_ref = next(it) if has_base else None
+    return n_ref, head, d_ref, s_ref, b_ref, list(it)
+
+
+# ---------------------------------------------------------------------------
+# fused weighted sum (FedAvg / streaming fold)
+# ---------------------------------------------------------------------------
+def _wsum_kernel(*refs, q8: bool, has_base: bool, has_acc: bool,
+                 qchunk: int):
+    n_ref, head, d_ref, s_ref, b_ref, (w_ref, o_ref) = _unpack(
+        refs, q8=q8, has_base=has_base, extra=1 if has_acc else 0)
+    t = _decode_tile(d_ref, s_ref, b_ref, qchunk=qchunk)
+    t = t * w_ref[...][:, None]
+
+    def body(c, a):
+        return a + jax.lax.dynamic_index_in_dim(t, c, 0, keepdims=False)
+
+    if has_acc:
+        init, lo = head[0][...], 0
+    else:
+        init, lo = t[0], 1
+    # n_ref (a runtime scalar) keeps the loop a genuine while loop — see
+    # the module docstring for why unrolling would break bitwise parity
+    o_ref[...] = jax.lax.fori_loop(lo, n_ref[0], body, init)
+
+
+def weighted_sum(data: np.ndarray, weights: np.ndarray, *,
+                 scales: Optional[np.ndarray] = None,
+                 qchunk: int = DEFAULT_QCHUNK,
+                 base: Optional[np.ndarray] = None,
+                 acc: Optional[np.ndarray] = None,
+                 block: Optional[int] = None,
+                 interpret: bool = True) -> np.ndarray:
+    """``(acc +) sum_c weights[c] * decode(data[c])`` as one fused pass.
+
+    ``data``: (C, N) fp32/fp64/bf16 or int8 (with ``scales`` (C, S)).
+    ``base``: shared (N,) fp64 round-start vector for delta payloads.
+    ``acc``: (N,) fp64 running accumulator (the streaming arrival-order
+    fold); when given, all C rows fold *into* it.  Returns (N,) fp64.
+    """
+    c, n = data.shape
+    if n == 0:
+        return np.zeros(0, np.float64) if acc is None else np.asarray(acc)
+    blk, total, args, specs = _assemble(
+        data, lead=c, scales=scales, qchunk=qchunk, base=base, acc=acc,
+        block=block)
+    args.append(np.asarray(weights, np.float64))
+    specs.append(pl.BlockSpec((c,), lambda i: (0,)))
+
+    kern = functools.partial(_wsum_kernel, q8=data.dtype == np.int8,
+                             has_base=base is not None,
+                             has_acc=acc is not None, qchunk=qchunk)
+    with jax.experimental.enable_x64():
+        out = pl.pallas_call(
+            kern, grid=(total // blk,), in_specs=specs,
+            out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((total,), jnp.float64),
+            interpret=interpret,
+        )(*args)
+        return np.array(out[:n])        # writable copy
+
+
+# ---------------------------------------------------------------------------
+# stacked-tile sort reductions (median / trimmed mean)
+# ---------------------------------------------------------------------------
+def _sort_kernel(*refs, q8: bool, has_base: bool, qchunk: int,
+                 kind: str, trim_k: int):
+    n_ref, _, d_ref, s_ref, b_ref, (o_ref,) = _unpack(
+        refs, q8=q8, has_base=has_base, extra=0)
+    t = _decode_tile(d_ref, s_ref, b_ref, qchunk=qchunk)
+    t = jnp.sort(t, axis=0)
+    c = t.shape[0]
+    if kind == "median":
+        if c % 2:
+            o_ref[...] = t[c // 2]
+        else:
+            o_ref[...] = (t[c // 2 - 1] + t[c // 2]) / 2.0
+        return
+
+    def body(r, a):
+        return a + jax.lax.dynamic_index_in_dim(t, r, 0, keepdims=False)
+
+    # trimmed SUM of sorted rows [trim_k, n_ref[0]); the host divides by
+    # the row count so the mean's final divide is numpy's own
+    o_ref[...] = jax.lax.fori_loop(trim_k + 1, n_ref[0], body, t[trim_k])
+
+
+def sort_reduce(data: np.ndarray, *, kind: str = "median", trim_k: int = 0,
+                scales: Optional[np.ndarray] = None,
+                qchunk: int = DEFAULT_QCHUNK,
+                base: Optional[np.ndarray] = None,
+                block: Optional[int] = None,
+                interpret: bool = True) -> np.ndarray:
+    """Coordinate-wise sorted reduction over the (C, N) stack.
+
+    ``kind="median"`` returns the per-coordinate median;
+    ``kind="trim_sum"`` returns the per-coordinate SUM of the sorted rows
+    ``[trim_k, C - trim_k)`` (the caller divides — see `_sort_kernel`).
+    """
+    assert kind in ("median", "trim_sum"), kind
+    c, n = data.shape
+    if n == 0:
+        return np.zeros(0, np.float64)
+    blk, total, args, specs = _assemble(
+        data, lead=c - trim_k, scales=scales, qchunk=qchunk, base=base,
+        acc=None, block=block)
+
+    kern = functools.partial(_sort_kernel, q8=data.dtype == np.int8,
+                             has_base=base is not None,
+                             qchunk=qchunk, kind=kind, trim_k=trim_k)
+    with jax.experimental.enable_x64():
+        out = pl.pallas_call(
+            kern, grid=(total // blk,), in_specs=specs,
+            out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((total,), jnp.float64),
+            interpret=interpret,
+        )(*args)
+        return np.array(out[:n])        # writable copy
+
+
+# ---------------------------------------------------------------------------
+# Krum Gram matrix
+# ---------------------------------------------------------------------------
+def _gram_kernel(*refs, q8: bool, has_base: bool, qchunk: int):
+    _, _, d_ref, s_ref, b_ref, (o_ref,) = _unpack(
+        refs, q8=q8, has_base=has_base, extra=0)
+    t = _decode_tile(d_ref, s_ref, b_ref, qchunk=qchunk)
+    # center on the first row: pairwise distances are translation
+    # invariant, and removing the common component keeps the
+    # ||a||^2+||b||^2-2<a,b> expansion from cancelling catastrophically
+    t = t - t[0]
+    g = jnp.dot(t, t.T, preferred_element_type=jnp.float64)
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        o_ref[...] = g
+
+    @pl.when(i > 0)
+    def _():
+        o_ref[...] += g
+
+
+def gram(data: np.ndarray, *,
+         scales: Optional[np.ndarray] = None,
+         qchunk: int = DEFAULT_QCHUNK,
+         base: Optional[np.ndarray] = None,
+         block: Optional[int] = None,
+         interpret: bool = True) -> np.ndarray:
+    """(C, C) fp64 Gram matrix of the row-0-centered client stack,
+    accumulated one column block per grid step (the Krum distance
+    kernel's MXU half; the host expands distances and scores)."""
+    c, n = data.shape
+    if n == 0:
+        return np.zeros((c, c), np.float64)
+    blk, total, args, specs = _assemble(
+        data, lead=c, scales=scales, qchunk=qchunk, base=base, acc=None,
+        block=block)
+
+    kern = functools.partial(_gram_kernel, q8=data.dtype == np.int8,
+                             has_base=base is not None, qchunk=qchunk)
+    with jax.experimental.enable_x64():
+        out = pl.pallas_call(
+            kern, grid=(total // blk,), in_specs=specs,
+            out_specs=pl.BlockSpec((c, c), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((c, c), jnp.float64),
+            interpret=interpret,
+        )(*args)
+        return np.array(out)            # writable copy

@@ -33,6 +33,11 @@ def _baseline():
         "quantized_agg_50M_16clients": _row(mbps=400.0),
         "wire_bytes_50M_16clients": _row(reduction=3.98, match_tol=True),
         "agg_throughput_500M_4clients": _row(us=0, skipped="oom"),
+        "pallas_agg_50M_16clients": _row(
+            interp_mbps=66.0, match=True, interpret_mode=True),
+        "pallas_agg_1M_4clients": _row(
+            interp_mbps=25.0, match=True, q8_match=True,
+            interpret_mode=True),
         "fig5_flare_round": _row(bitwise_match=True),
         "straggler_overlap_4clients": _row(round_over_delta=1.06),
     }
@@ -109,6 +114,37 @@ def test_missing_or_skipped_wire_rows_fail():
     skipped["wire_codec_convergence"] = _row(us=0, skipped="crash")
     assert any("wire_codec_convergence" in p
                for p in compare_rows(base, skipped, 0.15))
+
+
+def test_pallas_rows_gate_presence_and_match_not_timing():
+    """pallas_agg_* rows: a missing row or a broken match/q8_match flag
+    fails; their interp_mbps (interpret-mode, trace-overhead-bound) may
+    move freely."""
+    gone = _baseline()
+    del gone["pallas_agg_50M_16clients"]
+    assert any("pallas_agg_50M_16clients" in p
+               for p in compare_rows(_baseline(), gone, 0.15))
+    broken = _baseline()
+    broken["pallas_agg_50M_16clients"]["derived"]["match"] = False
+    assert any("pallas_agg_50M_16clients: match=False" in p
+               for p in compare_rows(_baseline(), broken, 0.15))
+    broken_q8 = _baseline()
+    broken_q8["pallas_agg_1M_4clients"]["derived"]["q8_match"] = False
+    assert any("q8_match=False" in p
+               for p in compare_rows(_baseline(), broken_q8, 0.15))
+    slow = _baseline()
+    slow["pallas_agg_50M_16clients"]["derived"]["interp_mbps"] = 1.0
+    assert compare_rows(_baseline(), slow, 0.15) == []
+
+
+def test_committed_baseline_carries_pallas_rows():
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "BENCH_baseline.json")
+    if not os.path.exists(path):
+        pytest.skip("baseline not generated yet")
+    rows = load_rows(path)
+    assert rows["pallas_agg_50M_16clients"]["derived"]["match"] is True
+    assert rows["pallas_agg_1M_4clients"]["derived"]["q8_match"] is True
 
 
 def test_ungated_timing_rows_never_flag():

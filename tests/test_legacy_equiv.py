@@ -1,0 +1,94 @@
+"""Direct coverage of the legacy.py reference path.
+
+``fl/legacy.py`` is the seed per-layer implementation the flat engine's
+bitwise-repro claim is measured against, yet since PR 1's rewrite it was
+only ever exercised *as a comparator*.  These tests pin the reference
+itself (hand-computed expectations, so legacy.py cannot silently drift)
+and enforce the claim over the real wire: legacy-codec bytes through
+LegacyFedAvg must equal flat-codec bytes through the flat engine bitwise.
+"""
+import numpy as np
+import pytest
+
+from repro.fl.legacy import (LEGACY_TABLE, LegacyFedAvg,
+                             legacy_weighted_average)
+from repro.fl.messages import FitRes, decode_fit_res, encode_fit_res
+from repro.fl.strategy import make_strategy, weighted_average
+
+
+def test_legacy_weighted_average_hand_computed():
+    """Pin the reference arithmetic itself: sum((w_i/W) * x_i) in fp64,
+    cast to the leaf dtype — on values chosen so the expectation is
+    exactly representable."""
+    a = [np.array([2.0, 4.0], np.float32), np.array([[8.0]], np.float32)]
+    b = [np.array([6.0, 0.0], np.float32), np.array([[0.0]], np.float32)]
+    out = legacy_weighted_average([(a, 1.0), (b, 3.0)])
+    # W=4: (1/4)*a + (3/4)*b
+    np.testing.assert_array_equal(out[0], np.array([5.0, 1.0], np.float32))
+    np.testing.assert_array_equal(out[1], np.array([[2.0]], np.float32))
+    assert out[0].dtype == np.float32 and out[1].dtype == np.float32
+
+
+def test_legacy_fedavg_min_clients_and_metrics():
+    params = [np.ones((3,), np.float32)]
+    res = [("site-0", FitRes(params, 5, {}))]
+    agg, metrics = LegacyFedAvg().aggregate_fit(1, res, [], params)
+    assert metrics == {"num_clients": 1}
+    with pytest.raises(RuntimeError):
+        LegacyFedAvg(min_fit_clients=2).aggregate_fit(1, res, [], params)
+
+
+def _wire_results(codec, n_clients=5, seed=0):
+    """Client results as the server would decode them off the wire."""
+    rng = np.random.default_rng(seed)
+    shapes = [(16, 8), (33,), (4, 4, 4), (1,)]
+    out = []
+    for c in range(n_clients):
+        arrays = [rng.normal(0, 1 + c, s).astype(np.float32)
+                  for s in shapes]
+        payload = encode_fit_res(FitRes(arrays, 10 + 3 * c, {}),
+                                 codec=codec)
+        r = decode_fit_res(payload)
+        r.num_examples = 10 + 3 * c
+        out.append((f"site-{c}", r))
+    current = [np.zeros(s, np.float32) for s in shapes]
+    return out, current
+
+
+def test_legacy_wire_vs_flat_wire_bitwise():
+    """The fig. 5 claim over the real wire: identical updates encoded
+    with the legacy per-array codec and the 0xF1 flat codec must
+    aggregate to bitwise-identical models through their own engines."""
+    legacy_res, current = _wire_results("legacy")
+    flat_res, _ = _wire_results("flat")
+    want, _ = LegacyFedAvg().aggregate_fit(1, legacy_res, [], current)
+    got, _ = make_strategy("fedavg").aggregate_fit(1, flat_res, [], current)
+    for g, w in zip(got, want):
+        assert g.dtype == w.dtype
+        np.testing.assert_array_equal(g, w)
+
+
+@pytest.mark.parametrize("name", sorted(LEGACY_TABLE))
+def test_legacy_table_strategies_run_from_wire_bytes(name):
+    """Every legacy reference strategy still executes end to end on
+    wire-decoded results (guards against legacy.py bit-rotting into a
+    comparator that can no longer run)."""
+    results, current = _wire_results("legacy", n_clients=6, seed=3)
+    kw = {"num_byzantine": 1} if name == "krum" else {}
+    agg, metrics = LEGACY_TABLE[name](**kw).aggregate_fit(
+        1, results, [], current)
+    assert len(agg) == len(current)
+    for a, c in zip(agg, current):
+        assert a.shape == c.shape and a.dtype == c.dtype
+        assert np.isfinite(a).all()
+
+
+def test_public_weighted_average_matches_legacy_bitwise():
+    rng = np.random.default_rng(11)
+    shapes = [(7, 3), (19,)]
+    results = [([rng.normal(0, 1, s).astype(np.float32) for s in shapes],
+                4.0 + i) for i in range(4)]
+    got = weighted_average(results)
+    want = legacy_weighted_average(results)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)
