@@ -20,7 +20,13 @@ when the trajectory regresses:
   fail loudly (for ``pallas_agg_*`` the flags ARE the differential
   Pallas-vs-numpy cross-check, run on the benchmark payload sizes);
 - ``wire_bytes_*`` rows whose payload ``reduction`` falls below the 3.5x
-  floor the quantized wire format promises.
+  floor the quantized wire format promises;
+- ``shard_agg_*`` rows: ``mbps`` and ``overlap_speedup`` under the
+  threshold like the other throughput rows, ``overlap_speedup`` under
+  the absolute 1.3x floor the sharded deferred-base fold promises over
+  the legacy per-arrival fold, and the ``match`` / ``shard_mem_ok``
+  invariant flags (bitwise shard-count invariance, per-shard accumulator
+  <= (1/shards + 10%) of the single-host footprint).
 
 Timing rows that legitimately vary run to run (round wall-clock, straggler
 ratios) are NOT gated — only throughput/speedup of the aggregation engine
@@ -45,14 +51,17 @@ from typing import Dict, List
 #: but losing them would silently drop the 3.5x-reduction and
 #: convergence checks below)
 GATED_PREFIXES = ("agg_throughput_", "quantized_agg_", "pallas_agg_",
-                  "wire_bytes_", "wire_codec_convergence")
+                  "wire_bytes_", "wire_codec_convergence", "shard_agg_")
 #: higher-is-better derived fields compared under the threshold
-GATED_FIELDS = ("mbps", "speedup_vs_legacy")
+GATED_FIELDS = ("mbps", "speedup_vs_legacy", "overlap_speedup")
 #: boolean derived fields that must hold wherever they appear
 INVARIANT_FLAGS = ("match", "match_tol", "bitwise_match", "within_tol",
-                   "q8_match")
+                   "q8_match", "shard_mem_ok")
 #: wire_bytes_* rows must keep at least this payload reduction vs fp32
 MIN_WIRE_REDUCTION = 3.5
+#: shard_agg_* rows must keep at least this speedup over the legacy
+#: per-arrival single-host fold (the decode/reduce overlap claim)
+MIN_SHARD_OVERLAP = 1.3
 
 
 def load_rows(path: str) -> Dict[str, dict]:
@@ -109,6 +118,12 @@ def compare_rows(base: Dict[str, dict], new: Dict[str, dict],
                 problems.append(
                     f"{name}: payload reduction {red} below the "
                     f"{MIN_WIRE_REDUCTION}x floor")
+        if name.startswith("shard_agg_"):
+            ov = derived.get("overlap_speedup")
+            if not isinstance(ov, (int, float)) or ov < MIN_SHARD_OVERLAP:
+                problems.append(
+                    f"{name}: overlap_speedup {ov} below the "
+                    f"{MIN_SHARD_OVERLAP}x floor")
     return problems
 
 

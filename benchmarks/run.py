@@ -28,6 +28,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          the fused int8-delta path's q8_match on the
                          small rows)
   wire_codec_convergence negotiated q8 vs flat on the quickstart task
+  shard_agg_*            mesh-sharded server aggregation state: q8-delta
+                         round folded through per-shard accumulators with
+                         the base deferred to finalize, vs the legacy
+                         per-arrival single-host fold (derived = MB/s,
+                         overlap_speedup, peak_rss_mb, bitwise match
+                         across shard counts, per-shard memory budget)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
 
@@ -424,6 +430,70 @@ def bench_pallas_agg(quick=False):
     _CASE_CACHE.clear()
 
 
+def _shard_agg_case(label, n_params, n_clients, shards=8):
+    """Mesh-sharded server aggregation state on the realistic post-
+    negotiation wire format (q8 int8 deltas against the server's own
+    downlink): ``overlap_speedup`` is the sharded deferred-base fold vs
+    the legacy per-arrival single-host fold on identical payloads (the
+    decode/reduce restructure the overlap rides on — the fp64 base is
+    read once per round at finalize instead of once per arrival, and the
+    decoder thread/async kernel chain fills the freed time on multi-core
+    hosts).  ``match`` is bitwise equality of finalize() across shard
+    counts (8 vs 1); ``shard_mem_ok`` holds the per-shard fp64
+    accumulator to <= (1/shards + 10%) of the single-host footprint."""
+    import resource
+
+    from repro.fl import agg_kernels as K
+    from repro.fl.flat import QuantParams, layout_for, quantize_int8
+
+    layout = layout_for([("float32", (n_params,))])
+    rng = np.random.default_rng(23)
+    bq, bs = quantize_int8(rng.random(n_params, np.float32))
+    base = QuantParams(layout, "q8", bq, bs)        # the q8 downlink
+    dq, ds = quantize_int8(
+        rng.standard_normal(n_params, dtype=np.float32) * 1e-3)
+    # all clients reuse one delta payload (same trick as agg_throughput:
+    # fold cost is identical and 500M x 16 clients fits in memory)
+    payload = QuantParams(layout, "q8", dq, ds, is_delta=True, base=base)
+    weights = [10.0 + i for i in range(n_clients)]
+    nbytes = dq.nbytes + ds.nbytes
+
+    def fold(**kw):
+        s = K.StreamingWeightedSum(layout, backend="numpy", **kw)
+        t0 = time.perf_counter()
+        for w in weights:
+            s.add(payload, w)
+        out = s.finalize()
+        return time.perf_counter() - t0, out, s
+
+    t_single, out_single, _ = fold()          # legacy per-arrival fold
+    _, out_one, _ = fold(shards=1)            # deferred-base, one shard
+    t_shard, out_shard, s = fold(shards=shards)
+    match = bool(np.array_equal(out_shard.buf, out_one.buf))
+    legacy_bitwise = bool(np.array_equal(out_shard.buf, out_single.buf))
+    mem_ok = bool(s.per_shard_acc_bytes()
+                  <= n_params * 8 * (1 / shards + 0.10))
+    peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    print(f"shard_agg_{label}_{n_clients}clients,{t_shard * 1e6:.0f},"
+          f"mbps={nbytes * n_clients / t_shard / 1e6:.0f};"
+          f"overlap_speedup={t_single / t_shard:.2f}x;"
+          f"peak_rss_mb={peak_rss:.0f};match={match};"
+          f"shard_mem_ok={mem_ok};shards={shards};"
+          f"pipeline={'on' if s.overlap else 'off'};"
+          f"legacy_bitwise={legacy_bitwise}")
+
+
+def bench_shard_agg(quick=False):
+    cases = [("50M", 50_000_000, 16)]
+    if not quick:
+        cases += [("500M", 500_000_000, 16)]
+    for label, n_params, n_clients in cases:
+        try:
+            _shard_agg_case(label, n_params, n_clients)
+        except MemoryError:
+            print(f"shard_agg_{label}_{n_clients}clients,0,skipped=oom")
+
+
 def _wire_case(label, n_params, n_clients):
     """Quantized wire format (0xF3 int8 + per-chunk scales) vs raw fp32:
     per-round payload bytes both directions, plus the fused
@@ -704,6 +774,7 @@ def main() -> None:
         bench_kernels(args.quick)
         bench_agg_throughput(args.quick)
         bench_pallas_agg(args.quick)
+        bench_shard_agg(args.quick)
         bench_wire_codecs(args.quick)
         bench_wire_convergence(args.quick)
         bench_straggler_overlap(args.quick)

@@ -14,7 +14,9 @@ resident in L2 while the loop streams each client's fp32 view exactly once:
   client in as it arrives and releasing the payload; peak memory is one
   float64 accumulator instead of every client's update. sum(w_i x_i)/W
   differs from the fold by <=1 ULP of the fp64 accumulator (invisible
-  after the fp32 cast).
+  after the fp32 cast).  With ``shards=N`` (or a mesh) the accumulator
+  splits into N qchunk-aligned ranges — per-shard Pallas folds, decode/
+  reduce overlap, deferred delta bases; see the class docstring.
 - :func:`median` / :func:`trimmed_mean` — coordinate-wise robust
   aggregation on a chunk-stacked (n, CHUNK) float64 tile (peak extra
   memory O(n * CHUNK), not O(n * total)).
@@ -60,12 +62,15 @@ numpy everywhere else — overridable with ``REPRO_AGG_BACKEND`` or
 """
 from __future__ import annotations
 
+import contextlib
 import os
+import queue
+import threading
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.fl.flat import FlatParams, Layout, np_dtype
+from repro.fl.flat import FlatParams, Layout, memo_token, np_dtype
 
 # 16K elements: chunk fp64 accumulator + scratch = 256 KiB, L2-resident.
 # QCHUNK (int8 scale window) divides CHUNK, so quantized reads stay aligned.
@@ -124,6 +129,27 @@ def resolve_backend(backend: Optional[str]) -> str:
 def _interpret() -> bool:
     # off-TPU the kernel bodies execute in interpret mode (CPU CI)
     return not _on_tpu()
+
+
+def _host_cores() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except (AttributeError, OSError):
+        return os.cpu_count() or 1
+
+
+def resolve_shards(shards: Optional[int], mesh=None) -> int:
+    """Shard count for the server aggregation state: an explicit count
+    wins; otherwise the mesh's "data" axis size (total device count for
+    meshes without one).  0 means single-host (legacy) state."""
+    if shards:
+        if shards < 0:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        return int(shards)
+    if mesh is None:
+        return 0
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return int(sizes.get("data", mesh.devices.size))
 
 
 def _tile_stack(flats: Sequence) -> Optional[Dict[str, Any]]:
@@ -223,35 +249,222 @@ def weighted_mean(pairs: Sequence[Tuple[FlatParams, float]],
     return out
 
 
+class _DecodePipeline:
+    """Decode/reduce overlap for the sharded streaming fold.
+
+    One decoder thread pulls arrivals off a depth-1 job queue, streams
+    each shard's range through the payload's ``decode_chunk`` into a
+    slot from a small ring of reusable shard-size fp64 buffers, scales
+    by the arrival weight, and hands (shard, buffer) to the caller's
+    thread, which folds it into the per-shard accumulator — so the codec
+    decode of arrival k+1 runs while arrival k is being reduced.  The
+    job queue bounds live payload references at two (the one decoding
+    plus the one queued: double buffering); the ring bounds decoded-but-
+    unfolded data at ``nslots`` shard ranges.
+
+    Ordering: one decoder + FIFO queues keep the (arrival, shard) fold
+    order identical to the serial loop, so the result is bitwise equal
+    to the non-overlapped fold.  A decoder exception is re-raised on the
+    caller's thread at the next submit/drain and kills the pipeline (and
+    so the round) — payload validation (shape checks, delta-base attach)
+    happens before submit, so this path is reserved for genuinely
+    malformed buffers.
+    """
+
+    def __init__(self, bounds: Sequence[Tuple[int, int]], nslots: int = 3):
+        self._shards = [(si, lo, hi)
+                        for si, (lo, hi) in enumerate(bounds) if hi > lo]
+        maxm = max((hi - lo for _, lo, hi in self._shards), default=0)
+        self._pool: "queue.Queue[np.ndarray]" = queue.Queue()
+        for _ in range(nslots):
+            self._pool.put(np.empty(maxm, np.float64))
+        self._jobs: "queue.Queue" = queue.Queue(maxsize=1)
+        self._out: "queue.Queue" = queue.Queue()
+        self._failed = False
+        self._closed = False
+        self._thread = threading.Thread(
+            target=self._run, name="agg-decode", daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        while True:
+            job = self._jobs.get()
+            if job is None:
+                self._out.put(None)
+                return
+            dec, sw = job
+            try:
+                for si, lo, hi in self._shards:
+                    buf = self._pool.get()
+                    for a in range(lo, hi, CHUNK):
+                        b = min(a + CHUNK, hi)
+                        o = buf[a - lo:b - lo]
+                        dec(a, b, o)
+                        o *= sw     # rounds like multiply-into-scratch
+                    self._out.put((si, buf, hi - lo))
+            except BaseException as e:  # noqa: BLE001 — forwarded to caller
+                self._out.put(e)
+                return
+
+    def submit(self, dec, sw: np.float64, fold) -> None:
+        if self._failed or self._closed:
+            raise RuntimeError("aggregation decode pipeline is closed")
+        while True:
+            try:
+                self._jobs.put_nowait((dec, sw))
+                break
+            except queue.Full:
+                self._fold_next(fold, block=True)
+        while self._fold_next(fold, block=False):
+            pass
+
+    def _fold_next(self, fold, block: bool) -> bool:
+        try:
+            item = self._out.get(block=block)
+        except queue.Empty:
+            return False
+        if item is None:            # close sentinel: keep it for drain()
+            self._out.put(None)
+            return False
+        if isinstance(item, BaseException):
+            self._failed = True
+            raise item
+        si, buf, m = item
+        try:
+            fold(si, buf, m)
+        finally:
+            self._pool.put(buf)
+        return True
+
+    def drain(self, fold) -> None:
+        """Close the job stream and fold everything still in flight."""
+        if self._failed:
+            raise RuntimeError("aggregation decode pipeline failed")
+        if not self._closed:
+            self._closed = True
+            while True:
+                # a plain blocking put could deadlock: the decoder may be
+                # waiting on a ring slot only this thread can return
+                try:
+                    self._jobs.put_nowait(None)
+                    break
+                except queue.Full:
+                    self._fold_next(fold, block=True)
+        while True:
+            item = self._out.get()
+            if item is None:
+                break
+            if isinstance(item, BaseException):
+                self._failed = True
+                self._thread.join(timeout=10.0)
+                raise item
+            si, buf, m = item
+            fold(si, buf, m)
+            self._pool.put(buf)
+        self._thread.join(timeout=10.0)
+
+
 class StreamingWeightedSum:
     """Incremental sum(w_i x_i); finalize() divides by W and casts.
 
-    On the Pallas backend each arriving payload folds in through one
-    fused dequantize+scale+accumulate kernel launch, so device reduction
-    overlaps the stragglers' compute (the numpy fold is the bitwise
-    reference and the fallback for payloads the kernels cannot express —
-    a mixed round may fold through both, which is still exact because the
-    per-arrival arithmetic is identical).  The accumulator stays
-    *unpadded* between arrivals: block geometry depends on each payload's
-    codec (qchunk alignment), so a persistent padded accumulator would
-    only be valid for codec-homogeneous rounds — the per-arrival
-    pad+slice is the price of accepting mixed arrivals."""
+    Two modes:
+
+    **Single-host (default, ``shards=None``)** — the frozen reference
+    semantics: one fp64 accumulator, every arrival folded through
+    ``f64_chunk`` (delta payloads reconstructed per arrival).  On the
+    Pallas backend each arrival is one fused dequantize+scale+accumulate
+    kernel launch; the padded device accumulator is **cached across
+    arrivals keyed by the round's codec block geometry** (the common,
+    codec-homogeneous case after PR 3 negotiation keeps one padded
+    buffer and one async dispatch chain for the whole round), and only a
+    mixed arrival with different geometry pays the retire + re-pad.
+
+    **Sharded (``shards=N`` or ``mesh=...``)** — the round's accumulator
+    splits into N contiguous qchunk-aligned ranges
+    (:func:`repro.sharding.shard_bounds` over the mesh "data" axis), so
+    per-shard memory is ~1/N of the single-host fp64 footprint and each
+    range folds through its own per-shard Pallas call (pinned to the
+    matching mesh device when a mesh is given); the all-gather into the
+    output buffer happens once, at :meth:`finalize`.  Delta payloads are
+    folded **base-deferred**: sum_k w_k (d_k + b) == sum_k w_k d_k +
+    W b, so the fold streams only the compressed delta and the fp64 base
+    is read once per round at finalize instead of once per arrival —
+    measurably faster single-core and the enabler for both overlap
+    modes.  Decode/reduce overlap: on the numpy backend a decoder thread
+    (:class:`_DecodePipeline`) decodes arrival k+1 while the caller's
+    thread reduces arrival k (auto-enabled on multi-core hosts;
+    ``overlap`` forces it); on the Pallas backend the same overlap falls
+    out of async dispatch — ``out_padded`` accumulator chaining means
+    kernel launches return before the device folds, so the host decodes
+    the next arrival while shard kernels run.  On TPU the per-shard
+    kernels use fp32 tiles + an fp64 carry (fp64 VPU is emulated); off-
+    TPU they stay fp64, the bitwise oracle.
+
+    Numerics: the sharded fold is bitwise-invariant across shard counts
+    and overlap on/off (pure elementwise ops in arrival order).  It is
+    bitwise-equal to the single-host mode for non-delta payloads, and
+    within ~1 ULP of the fp64 accumulator for delta payloads (the
+    deferred base changes the summation grouping) — the same order of
+    difference the arrival-order fold already carries vs the deferred
+    batch kernel, invisible after the fp32 output cast.
+    """
 
     def __init__(self, layout: Layout, backend: Optional[str] = None,
-                 block: Optional[int] = None):
+                 block: Optional[int] = None, *,
+                 shards: Optional[int] = None, mesh=None,
+                 overlap: Optional[bool] = None,
+                 tile_dtype: Optional[str] = None):
         self.layout = layout
         self.backend = resolve_backend(backend)
         self._block = block
-        # id(base) -> (base object, its fp64 materialization)
-        self._base_memo: Dict[int, Tuple[Any, np.ndarray]] = {}
-        self._acc = np.zeros(layout.total_size, np.float64)
+        # delta-base memo, memo_token(base) -> fp64 materialization.
+        # Tokens are process-unique (never recycled, unlike id()), so the
+        # memo cannot alias a GC'd base and need not pin the object.
+        self._base_memo: Dict[str, np.ndarray] = {}
         self._scratch = np.empty(min(CHUNK, max(layout.total_size, 1)),
                                  np.float64)
         self._tmp = np.empty_like(self._scratch)
         self.total_w = 0.0
         self.count = 0
+        self.shards = resolve_shards(shards, mesh)
+        self.mesh = mesh
+        self._tile_dtype = tile_dtype or (
+            "float32" if _on_tpu() else "float64")
+        # legacy-mode padded device accumulator (geometry-keyed cache)
+        self._acc_padded = None
+        self._pad_geom: Optional[Tuple[int, int]] = None
+        if self.shards:
+            from repro.fl.flat import QCHUNK
+            from repro.sharding import shard_bounds
 
+            self._bounds = shard_bounds(layout.total_size, self.shards,
+                                        align=QCHUNK)
+            self._sacc: List[Optional[np.ndarray]] = [
+                np.zeros(hi - lo, np.float64) for lo, hi in self._bounds]
+            self._spad: List[Any] = [None] * self.shards
+            self._sgeom: List[Optional[Tuple[int, int]]] = \
+                [None] * self.shards
+            # deferred delta bases: token -> [base object, summed weight]
+            self._deferred: Dict[str, list] = {}
+            self._devices = (list(mesh.devices.flat)
+                             if mesh is not None else None)
+            use_pipe = (self.backend == "numpy" and layout.total_size > 0
+                        and (overlap if overlap is not None
+                             else _host_cores() > 1))
+            self._pipe = _DecodePipeline(self._bounds) if use_pipe else None
+            self._acc = None
+        else:
+            self._acc = np.zeros(layout.total_size, np.float64)
+            self._pipe = None
+        self.overlap = self._pipe is not None
+
+    # ------------------------------------------------------------ shared
     def add(self, fp: FlatParams, w: float) -> None:
+        if self.shards:
+            self._add_sharded(fp, w)
+            self.total_w += float(w)
+            self.count += 1
+            return
         if self.backend == "pallas" and self.layout.total_size \
                 and self._add_pallas(fp, w):
             self.total_w += float(w)
@@ -259,13 +472,50 @@ class StreamingWeightedSum:
             return
         sw = np.float64(w)
         n = self.layout.total_size
+        acc = self._acc_vec()
         for lo in range(0, n, CHUNK):
             hi = min(lo + CHUNK, n)
             x = fp.f64_chunk(lo, hi, self._tmp)
             np.multiply(x, sw, out=self._scratch[:hi - lo])
-            self._acc[lo:hi] += self._scratch[:hi - lo]
+            acc[lo:hi] += self._scratch[:hi - lo]
         self.total_w += float(w)
         self.count += 1
+
+    def finalize(self) -> FlatParams:
+        if self.shards:
+            return self._finalize_sharded()
+        acc = self._acc_vec()
+        acc *= np.float64(1.0 / self.total_w)
+        out = FlatParams.zeros(self.layout)
+        _scatter_leaves(acc, self.layout, out)
+        return out
+
+    def per_shard_acc_bytes(self) -> int:
+        """Largest per-shard fp64 accumulator footprint, in bytes."""
+        if not self.shards:
+            return self.layout.total_size * 8
+        return max((hi - lo for lo, hi in self._bounds), default=0) * 8
+
+    def _geometry(self, src, n: int) -> Tuple[int, int]:
+        from repro.kernels import agg_reduce
+
+        qc = src.qchunk if src.kind == "q8" else 1
+        blk = self._block or agg_reduce.choose_block(n, qc)
+        if src.kind == "q8":
+            blk = -(-blk // qc) * qc
+        return blk, -(-n // blk) * blk
+
+    # ------------------------------------------------- single-host mode
+    def _acc_vec(self) -> np.ndarray:
+        """The unpadded single-host accumulator; a live padded device
+        accumulator (geometry cache) is materialized and retired first —
+        the per-arrival pad+slice fallback for mixed arrivals."""
+        if self._acc_padded is not None:
+            n = self.layout.total_size
+            self._acc = np.array(np.asarray(self._acc_padded)[:n])
+            self._acc_padded = None
+            self._pad_geom = None
+        return self._acc
 
     def _add_pallas(self, fp, w: float) -> bool:
         ts = getattr(fp, "tile_source", None)
@@ -274,27 +524,160 @@ class StreamingWeightedSum:
             return False
         base = None
         if src.base is not None:
-            # the memo entry keeps the base OBJECT alive: a bare id() key
-            # could be reused by a different base after gc
-            hit = self._base_memo.get(id(src.base))
-            if hit is not None and hit[0] is src.base:
-                base = hit[1]
-            else:
-                base = src.base.to_f64()
-                self._base_memo[id(src.base)] = (src.base, base)
+            tok = memo_token(src.base)
+            base = self._base_memo.get(tok)
+            if base is None:
+                base = self._base_memo[tok] = src.base.to_f64()
         from repro.kernels import agg_reduce
 
-        self._acc = agg_reduce.weighted_sum(
+        geom = self._geometry(src, self.layout.total_size)
+        if self._pad_geom is not None and self._pad_geom != geom:
+            self._acc_vec()         # mixed arrival: retire, re-pad below
+        acc = self._acc_padded if self._pad_geom == geom else self._acc
+        out = agg_reduce.weighted_sum(
             src.data[None, :], np.array([w], np.float64),
             scales=None if src.scales is None else src.scales[None, :],
-            qchunk=src.qchunk, base=base, acc=self._acc,
-            block=self._block, interpret=_interpret())
+            qchunk=src.qchunk, base=base, acc=acc,
+            block=geom[0], interpret=_interpret(), out_padded=True)
+        self._acc_padded, self._pad_geom = out, geom
+        self._acc = None
         return True
 
-    def finalize(self) -> FlatParams:
-        self._acc *= np.float64(1.0 / self.total_w)
+    # ------------------------------------------------------ sharded mode
+    @staticmethod
+    def _decoder(fp):
+        dec = getattr(fp, "decode_chunk", None)
+        if dec is None:
+            if getattr(fp, "is_delta", False):
+                raise TypeError(
+                    "sharded fold needs decode_chunk() on delta payloads "
+                    f"(got {type(fp).__name__})")
+            dec = fp.f64_chunk
+        return dec
+
+    def _record_base(self, fp, w: float) -> None:
+        if not getattr(fp, "is_delta", False):
+            return
+        base = getattr(fp, "base", None)
+        if base is None:
+            raise ValueError(
+                "delta-encoded payload needs its round base attached "
+                "(QuantParams.base) before it can be read")
+        tok = memo_token(base)
+        ent = self._deferred.get(tok)
+        if ent is None:
+            self._deferred[tok] = [base, float(w)]
+        else:
+            ent[1] += float(w)
+
+    def _shard_acc(self, si: int) -> np.ndarray:
+        if self._spad[si] is not None:
+            lo, hi = self._bounds[si]
+            self._sacc[si] = np.array(np.asarray(self._spad[si])[:hi - lo])
+            self._spad[si] = None
+            self._sgeom[si] = None
+        return self._sacc[si]
+
+    def _fold_item(self, si: int, buf: np.ndarray, m: int) -> None:
+        self._sacc[si] += buf[:m]
+
+    def _add_sharded(self, fp, w: float) -> None:
+        self._record_base(fp, w)
+        if self.backend == "pallas" and self.layout.total_size \
+                and self._add_sharded_pallas(fp, w):
+            return
+        dec = self._decoder(fp)
+        sw = np.float64(w)
+        if self._pipe is not None:
+            self._pipe.submit(dec, sw, self._fold_item)
+            return
+        for si, (lo, hi) in enumerate(self._bounds):
+            if hi <= lo:
+                continue
+            acc = self._shard_acc(si)
+            for a in range(lo, hi, CHUNK):
+                b = min(a + CHUNK, hi)
+                x = dec(a, b, self._tmp)
+                np.multiply(x, sw, out=self._scratch[:b - a])
+                acc[a - lo:b - lo] += self._scratch[:b - a]
+
+    def _add_sharded_pallas(self, fp, w: float) -> bool:
+        ts = getattr(fp, "tile_source", None)
+        if ts is None:
+            return False
+        live = [(si, lo, hi)
+                for si, (lo, hi) in enumerate(self._bounds) if hi > lo]
+        sources = []
+        try:
+            for _, lo, hi in live:
+                src = ts(lo, hi)
+                if src is None:
+                    return False
+                sources.append(src)
+        except TypeError:       # foreign adapter without range support
+            return False
+        from repro.kernels import agg_reduce
+
+        wts = np.array([w], np.float64)
+        for (si, lo, hi), src in zip(live, sources):
+            geom = self._geometry(src, hi - lo)
+            if self._sgeom[si] is not None and self._sgeom[si] != geom:
+                self._shard_acc(si)
+            acc = self._spad[si] if self._sgeom[si] == geom \
+                else self._sacc[si]
+            dev = None
+            if self._devices:
+                dev = self._devices[si % len(self._devices)]
+            if dev is not None:
+                import jax
+
+                ctx = jax.default_device(dev)
+            else:
+                ctx = contextlib.nullcontext()
+            with ctx:
+                # base deferred to finalize even when attached (base=None)
+                out = agg_reduce.weighted_sum(
+                    src.data[None, :], wts,
+                    scales=None if src.scales is None
+                    else src.scales[None, :],
+                    qchunk=src.qchunk, base=None, acc=acc,
+                    block=geom[0], interpret=_interpret(),
+                    out_padded=True, tile_dtype=self._tile_dtype)
+            self._spad[si], self._sgeom[si] = out, geom
+            self._sacc[si] = None
+        return True
+
+    def _finalize_sharded(self) -> FlatParams:
+        if self._pipe is not None:
+            self._pipe.drain(self._fold_item)
+        inv = np.float64(1.0 / self.total_w)
+        # canonical token order: the deferred-base add is independent of
+        # which client's delta arrived first
+        defs = [(self._deferred[tok][0],
+                 np.float64(self._deferred[tok][1] / self.total_w))
+                for tok in sorted(self._deferred)]
         out = FlatParams.zeros(self.layout)
-        _scatter_leaves(self._acc, self.layout, out)
+        n = self.layout.total_size
+        uniform = self.layout.uniform_dtype in _FLOATS
+        ovec = out.math_view() if uniform else np.empty(n, np.float64)
+        # the one all-gather: each shard's acc/W (+ deferred (w_b/W) b,
+        # streamed chunk-wise so no model-size fp64 base materializes)
+        # lands in the output buffer
+        for si, (lo, hi) in enumerate(self._bounds):
+            if hi <= lo:
+                continue
+            a = self._shard_acc(si)
+            a *= inv
+            for c0 in range(lo, hi, CHUNK):
+                c1 = min(c0 + CHUNK, hi)
+                seg = a[c0 - lo:c1 - lo]
+                for bobj, bw in defs:
+                    x = bobj.f64_chunk(c0, c1, self._tmp)
+                    np.multiply(x, bw, out=self._scratch[:c1 - c0])
+                    seg += self._scratch[:c1 - c0]
+                ovec[c0:c1] = seg
+        if not uniform:
+            _scatter_leaves(ovec, self.layout, out)
         return out
 
 

@@ -27,12 +27,40 @@ per-chunk accumulate, never materializing a model-size fp32 copy.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 NDArrays = List[np.ndarray]
+
+# process-unique memo-token counter (see memo_token)
+_MEMO_COUNTER = itertools.count(1)
+
+
+def memo_token(obj) -> str:
+    """Stable identity token for payload memoization (delta-base caches).
+
+    ``id()`` is only unique among *live* objects: a GC'd round base can
+    recycle its id mid-round and alias a stale fp64 materialization in a
+    long-lived memo.  The token instead combines a process-unique counter
+    (assigned lazily, stored on the object) with the layout fingerprint,
+    so it is never reused — a memo keyed by it cannot alias and need not
+    keep the object alive.  Objects without the ``_memo_token`` slot get
+    a fresh token per call (memo never hits: always correct, just
+    uncached).
+    """
+    tok = getattr(obj, "_memo_token", None)
+    if tok is None:
+        lo = getattr(obj, "layout", None)
+        fp = f"{lo.total_bytes}x{lo.total_size}" if lo is not None else "?"
+        tok = f"{next(_MEMO_COUNTER)}:{fp}"
+        try:
+            obj._memo_token = tok
+        except AttributeError:
+            pass
+    return tok
 
 
 def np_dtype(name: str) -> np.dtype:
@@ -99,13 +127,14 @@ def layout_of(arrays: NDArrays) -> Layout:
 class FlatParams:
     """One contiguous uint8 buffer + a Layout describing the leaves."""
 
-    __slots__ = ("buf", "layout")
+    __slots__ = ("buf", "layout", "_memo_token")
 
     def __init__(self, buf: np.ndarray, layout: Layout):
         assert buf.dtype == np.uint8 and buf.ndim == 1
         assert buf.nbytes == layout.total_bytes, (buf.nbytes, layout)
         self.buf = buf
         self.layout = layout
+        self._memo_token: Optional[str] = None
 
     # ------------------------------------------------------------ builders
     @classmethod
@@ -193,20 +222,38 @@ class FlatParams:
                       casting="unsafe")
         return o
 
+    # raw buffers carry no delta encoding: the codec decode IS f64_chunk
+    # (shared protocol with QuantParams.decode_chunk, which strips the
+    # delta-base add — see the sharded deferred-base fold)
+    def decode_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        return self.f64_chunk(lo, hi, out)
+
     def nbytes(self) -> int:
         return self.layout.total_bytes
 
-    def tile_source(self) -> Optional["TileSource"]:
+    def tile_source(self, lo: int = 0,
+                    hi: Optional[int] = None) -> Optional["TileSource"]:
         """Adapter for the Pallas aggregation backend; ``None`` when this
         payload must stay on the numpy kernels (integer domains, e.g.
-        SecAgg's uint64 shares)."""
+        SecAgg's uint64 shares).
+
+        ``(lo, hi)`` selects an element range — the shard-aware slicing
+        the mesh-sharded accumulator uses to hand each shard's column
+        range to its own kernel launch (zero-copy for uniform layouts).
+        """
+        if hi is None:
+            hi = self.layout.total_size
         u = self.layout.uniform_dtype
         if u is None:
-            # mixed dtypes: one fp64 materialization — the same values
-            # f64_chunk streams, so the fused kernels stay bitwise
-            return TileSource("float", self.to_f64())
+            # mixed dtypes: one fp64 materialization of the range — the
+            # same values f64_chunk streams, so the fused kernels stay
+            # bitwise
+            if lo == 0 and hi == self.layout.total_size:
+                return TileSource("float", self.to_f64())
+            return TileSource(
+                "float", self.f64_chunk(lo, hi, np.empty(hi - lo)))
         if u in ("float16", "float32", "float64", "bfloat16"):
-            return TileSource("float", self.math_view())
+            return TileSource("float", self.math_view()[lo:hi])
         return None
 
 
@@ -319,6 +366,21 @@ def _dequant_q8(data: np.ndarray, scales: np.ndarray, qchunk: int,
     return o
 
 
+def dequantize_int8(data: np.ndarray, scales: np.ndarray,
+                    qchunk: int = QCHUNK,
+                    out: Optional[np.ndarray] = None) -> np.ndarray:
+    """int8 + per-chunk scales -> fp64 vector (the `_dequant_q8` chain:
+    rounds through fp32 once, bitwise the client-side reconstruction).
+    Public entry point for consumers of the PR 3 quant layout outside the
+    wire path — e.g. the int8-quantized FedOpt server moments."""
+    n = int(data.size)
+    if out is None:
+        out = np.empty(n, np.float64)
+    if n:
+        _dequant_q8(data, scales, qchunk, 0, n, out)
+    return out[:n]
+
+
 class QuantParams:
     """Zero-copy view of a quantized wire payload.
 
@@ -336,7 +398,7 @@ class QuantParams:
     """
 
     __slots__ = ("layout", "mode", "data", "scales", "qchunk", "is_delta",
-                 "base", "_chunk_cache")
+                 "base", "_chunk_cache", "_memo_token")
 
     def __init__(self, layout: Layout, mode: str, data: np.ndarray,
                  scales: Optional[np.ndarray] = None, qchunk: int = QCHUNK,
@@ -356,15 +418,25 @@ class QuantParams:
         # low_memory streaming path folds client-outer and misses — it
         # trades that redundant dequant for O(1)-model-size peak memory.
         self._chunk_cache = None
+        self._memo_token: Optional[str] = None
 
     # ------------------------------------------------------------- protocol
-    def f64_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
-        """Fused dequantize(+base-add) of elements [lo, hi) into ``out``."""
+    def decode_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        """Codec decode of elements [lo, hi) into ``out`` — WITHOUT the
+        delta-base add.  The sharded streaming fold reads deltas through
+        this and defers the base to finalize (sum_k w_k (d_k + b) ==
+        sum_k w_k d_k + W b), so the fp64 base is read once per round,
+        not once per arrival."""
         o = out[:hi - lo]
         if self.mode == "bf16":
             np.copyto(o, self.data[lo:hi], casting="unsafe")
         else:
             _dequant_q8(self.data, self.scales, self.qchunk, lo, hi, o)
+        return o
+
+    def f64_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        """Fused dequantize(+base-add) of elements [lo, hi) into ``out``."""
+        o = self.decode_chunk(lo, hi, out)
         if self.is_delta:
             base = self.base
             if base is None:
@@ -416,14 +488,28 @@ class QuantParams:
         return int(self.data.nbytes
                    + (self.scales.nbytes if self.scales is not None else 0))
 
-    def tile_source(self) -> Optional[TileSource]:
+    def tile_source(self, lo: int = 0,
+                    hi: Optional[int] = None) -> Optional[TileSource]:
         """Adapter for the Pallas aggregation backend: the still-compressed
         wire arrays, so the dequantize stays fused in the kernel.  A delta
         payload whose base is not attached yet returns ``None`` — the
-        numpy path then raises its explanatory error."""
+        numpy path then raises its explanatory error.
+
+        ``(lo, hi)`` selects an element range (shard-aware slicing, all
+        zero-copy views).  For int8 payloads ``lo`` must sit on a scale-
+        window boundary — :func:`repro.sharding.shard_bounds` aligns
+        shard edges to ``qchunk`` exactly so this holds; a misaligned
+        range returns ``None`` (numpy fallback) rather than mis-scaling.
+        """
+        if hi is None:
+            hi = self.layout.total_size
         if self.is_delta and self.base is None:
             return None
         base = self.base if self.is_delta else None
         if self.mode == "bf16":
-            return TileSource("float", self.data, base=base)
-        return TileSource("q8", self.data, self.scales, self.qchunk, base)
+            return TileSource("float", self.data[lo:hi], base=base)
+        if lo % self.qchunk:
+            return None
+        c0, c1 = lo // self.qchunk, -(-hi // self.qchunk)
+        return TileSource("q8", self.data[lo:hi], self.scales[c0:c1],
+                          self.qchunk, base)

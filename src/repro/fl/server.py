@@ -43,6 +43,16 @@ class ServerConfig:
     # accumulation folds through the fused device kernels (see
     # repro.fl.agg_kernels "Backend dispatch").
     agg_backend: Optional[str] = None
+    # server-state sharding: split the round's streaming accumulator and
+    # any FedOpt moments into this many contiguous qchunk-aligned ranges
+    # (per-shard memory ~1/agg_shards of the single-host fp64 footprint,
+    # one fused kernel per shard, all-gather at finalize).  None keeps
+    # the single-host reference state.  ``shard_mesh`` (a jax Mesh)
+    # instead derives the count from its "data" axis and pins each
+    # shard's kernel to the matching device — see
+    # repro.launch.mesh.make_agg_mesh and StreamingWeightedSum.
+    agg_shards: Optional[int] = None
+    shard_mesh: Optional[Any] = None
 
 
 class Driver:
@@ -109,6 +119,11 @@ class ServerApp:
         self.strategy = strategy
         if config.agg_backend is not None and hasattr(strategy, "backend"):
             strategy.backend = config.agg_backend
+        if config.agg_shards is not None and hasattr(strategy, "shards"):
+            strategy.shards = config.agg_shards
+        if config.shard_mesh is not None and hasattr(strategy,
+                                                     "shard_mesh"):
+            strategy.shard_mesh = config.shard_mesh
 
     @staticmethod
     def _memo_encode(memo: Dict[Any, bytes], ins, enc_fn,

@@ -32,7 +32,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.fl import agg_kernels as kernels
-from repro.fl.flat import FlatParams, Layout, unflatten_vector
+from repro.fl.flat import (QCHUNK, FlatParams, Layout, dequantize_int8,
+                           quantize_int8, unflatten_vector)
 from repro.fl.messages import EvaluateIns, EvaluateRes, FitIns, FitRes
 
 NDArrays = List[np.ndarray]
@@ -175,13 +176,17 @@ class _WeightedFitAcc(FitAccumulator):
         fp = _flat_of(res)
         _check_shapes(fp, self.current, node)
         w = float(res.num_examples)
-        if self.strategy.low_memory:
+        st = self.strategy
+        if st.low_memory or kernels.resolve_shards(st.shards, st.shard_mesh):
             # fold on arrival: order-dependent by <=1 ULP of the fp64
             # accumulator (invisible after the fp32 cast) — documented
-            # trade for O(1)-model-size peak memory
+            # trade for O(1)-model-size peak memory.  Sharding implies
+            # streaming: the per-shard accumulators ARE the low-memory
+            # server state.
             if self._streaming is None:
                 self._streaming = kernels.StreamingWeightedSum(
-                    fp.layout, backend=self.strategy.backend)
+                    fp.layout, backend=st.backend, shards=st.shards,
+                    mesh=st.shard_mesh, overlap=st.overlap_decode)
             self._streaming.add(fp, w)      # payload is droppable after this
         else:
             self.pairs.append((node, fp, w))
@@ -224,9 +229,30 @@ class FedAvg(Strategy):
     # repro.fl.agg_kernels "Backend dispatch").  ServerConfig.agg_backend
     # sets it fleet-wide without touching strategy construction.
     backend: Optional[str] = None
+    # server-state sharding: split the round accumulator (and any FedOpt
+    # moments) into this many contiguous qchunk-aligned ranges — each
+    # ~1/shards of the single-host fp64 footprint, folded by its own
+    # per-shard kernel.  None/0 keeps the single-host reference state.
+    # ``shard_mesh`` (a jax Mesh) derives the count from its "data" axis
+    # and pins each shard's kernel to the matching device.
+    # ServerConfig.agg_shards / shard_mesh set these fleet-wide.
+    shards: Optional[int] = None
+    shard_mesh: Optional[Any] = None
+    # decode/reduce overlap for the sharded streaming fold: None = auto
+    # (on for multi-core hosts), True/False forces (see
+    # StreamingWeightedSum)
+    overlap_decode: Optional[bool] = None
 
     def quorum(self) -> int:
         return max(self.min_fit_clients, self.min_available, 1)
+
+    def _num_shards(self) -> int:
+        return kernels.resolve_shards(self.shards, self.shard_mesh)
+
+    def _shard_bounds(self, total: int):
+        from repro.sharding import shard_bounds
+
+        return shard_bounds(total, self._num_shards(), align=QCHUNK)
 
     def initialize_parameters(self):
         return self.initial_parameters
@@ -254,8 +280,14 @@ class FedAvgM(FedAvg):
     server_lr: float = 1.0
     momentum: float = 0.9
     _velocity: Optional[np.ndarray] = field(default=None, repr=False)
+    # sharded server state (one velocity vector per shard range) when
+    # ``shards``/``shard_mesh`` is set; the update is elementwise, so the
+    # sharded result is bitwise the single-vector one
+    _shard_vel: Optional[list] = field(default=None, repr=False)
 
     def _server_opt(self, rnd, target, current):
+        if self._num_shards():
+            return self._server_opt_sharded(rnd, target, current)
         cur = FlatParams.from_arrays(current, target.layout).to_f64()
         delta = target.to_f64()
         delta -= cur
@@ -266,23 +298,71 @@ class FedAvgM(FedAvg):
         cur += np.float64(self.server_lr) * self._velocity
         return unflatten_vector(cur, target.layout)
 
+    def _server_opt_sharded(self, rnd, target, current):
+        cur_fp = FlatParams.from_arrays(current, target.layout)
+        bounds = self._shard_bounds(target.layout.total_size)
+        if self._shard_vel is None:
+            self._shard_vel = [np.zeros(hi - lo) for lo, hi in bounds]
+        out = np.empty(target.layout.total_size, np.float64)
+        mom, lr = np.float64(self.momentum), np.float64(self.server_lr)
+        for (lo, hi), vel in zip(bounds, self._shard_vel):
+            if hi <= lo:
+                continue
+            cur = cur_fp.f64_chunk(lo, hi, np.empty(hi - lo))
+            delta = target.f64_chunk(lo, hi, np.empty(hi - lo))
+            delta -= cur
+            vel *= mom
+            vel += delta
+            cur += lr * vel
+            out[lo:hi] = cur
+        return unflatten_vector(out, target.layout)
+
 
 @dataclass
 class _AdaptiveBase(FedAvg):
     """Server-side adaptive optimizers (FedOpt family), fused over the
-    flat fp64 state vectors."""
+    flat fp64 state vectors.
+
+    With ``shards``/``shard_mesh`` set, the ``_m``/``_v`` moments live as
+    one vector per shard range (the same qchunk-aligned partition the
+    streaming accumulator uses).  The update is elementwise, so the
+    sharded trajectory is **bitwise** the single-vector one —
+    ``tests/test_shard_agg.py`` pins it over multiple rounds.
+    ``quantize_moments`` additionally stores each shard's moments as
+    int8 + per-chunk fp32 scales (the PR 3 quant wire layout): ~1/8 the
+    fp64 state footprint, at a per-coordinate error bounded by scale/2
+    per round — opt-in for servers where moment memory binds.
+    """
 
     server_lr: float = 0.1
     beta1: float = 0.9
     beta2: float = 0.99
     tau: float = 1e-3
+    quantize_moments: bool = False
     _m: Optional[np.ndarray] = field(default=None, repr=False)
     _v: Optional[np.ndarray] = field(default=None, repr=False)
+    # per-shard [m, v] state; each entry a fp64 vector or, quantized,
+    # an (int8 data, fp32 scales) tuple
+    _shard_mv: Optional[list] = field(default=None, repr=False)
 
     def _second_moment(self, v: np.ndarray, d: np.ndarray) -> np.ndarray:
         raise NotImplementedError
 
+    def _load_moment(self, st, n: int, init: float) -> np.ndarray:
+        if st is None:
+            return np.full(n, init, np.float64)
+        if isinstance(st, tuple):
+            return dequantize_int8(st[0], st[1], QCHUNK)
+        return st
+
+    def _store_moment(self, vec: np.ndarray):
+        if self.quantize_moments:
+            return quantize_int8(vec)
+        return vec
+
     def _server_opt(self, rnd, target, current):
+        if self._num_shards():
+            return self._server_opt_sharded(rnd, target, current)
         cur = FlatParams.from_arrays(current, target.layout).to_f64()
         d = target.to_f64()
         d -= cur
@@ -295,6 +375,32 @@ class _AdaptiveBase(FedAvg):
         cur += np.float64(self.server_lr) * self._m \
             / (np.sqrt(self._v) + np.float64(self.tau))
         return unflatten_vector(cur, target.layout)
+
+    def _server_opt_sharded(self, rnd, target, current):
+        cur_fp = FlatParams.from_arrays(current, target.layout)
+        bounds = self._shard_bounds(target.layout.total_size)
+        if self._shard_mv is None:
+            self._shard_mv = [[None, None] for _ in bounds]
+        out = np.empty(target.layout.total_size, np.float64)
+        b1 = np.float64(self.beta1)
+        lr, tau = np.float64(self.server_lr), np.float64(self.tau)
+        for (lo, hi), st in zip(bounds, self._shard_mv):
+            if hi <= lo:
+                continue
+            n = hi - lo
+            cur = cur_fp.f64_chunk(lo, hi, np.empty(n))
+            d = target.f64_chunk(lo, hi, np.empty(n))
+            d -= cur
+            m = self._load_moment(st[0], n, 0.0)
+            v = self._load_moment(st[1], n, self.tau ** 2)
+            m *= b1
+            m += np.float64(1 - self.beta1) * d
+            v = self._second_moment(v, d)
+            st[0] = self._store_moment(m)
+            st[1] = self._store_moment(v)
+            cur += lr * m / (np.sqrt(v) + tau)
+            out[lo:hi] = cur
+        return unflatten_vector(out, target.layout)
 
 
 @dataclass

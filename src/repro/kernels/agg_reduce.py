@@ -44,8 +44,10 @@ This container is CPU-only: kernels are validated with
 ``pl.pallas_call(..., interpret=True)`` (fp64 under a scoped
 ``jax.experimental.enable_x64``); the BlockSpecs/grids are the TPU
 configuration under test.  On real TPUs fp64 VPU throughput is emulated —
-the production plan (ROADMAP "sharded server state") is fp32 tiles with
-fp64 carry, which keeps the same kernel structure.
+:func:`weighted_sum` therefore offers ``tile_dtype="float32"`` (fp32
+tiles + fp64 carry: the decode/scale tile math at fp32 VPU rate, only
+the accumulate widened), selected by the sharded streaming fold on TPU
+hosts; the interpret-mode fp64 path stays the bitwise cross-check oracle.
 """
 from __future__ import annotations
 
@@ -87,22 +89,30 @@ def _pad_cols(a: np.ndarray, total: int, fill=0) -> np.ndarray:
     return out
 
 
-def _decode_tile(d_ref, s_ref, b_ref, *, qchunk: int) -> jnp.ndarray:
-    """The fused wire decode: (C, blk) wire-dtype tile -> fp64.
+def _decode_tile(d_ref, s_ref, b_ref, *, qchunk: int,
+                 tile_dtype=jnp.float64) -> jnp.ndarray:
+    """The fused wire decode: (C, blk) wire-dtype tile -> ``tile_dtype``.
 
     int8 payloads dequantize through fp32 (one rounding, matching the
     numpy ``_dequant_q8`` chain bitwise); float payloads widen exactly.
     A delta payload's shared round base is added in fp64 afterwards, like
     ``QuantParams.f64_chunk``.
+
+    ``tile_dtype=float32`` is the TPU production scheme (fp32 tiles +
+    fp64 carry): fp64 VPU throughput is emulated on TPU, so the tile math
+    (decode, scale) runs at fp32 rate and only the per-element
+    accumulate widens to the fp64 carry.  It is NOT bitwise against the
+    fp64 path (each product carries one extra fp32 rounding) — the
+    interpret-mode fp64 path stays the cross-check oracle.
     """
     raw = d_ref[...]
     if raw.dtype == jnp.int8:
         c, blk = raw.shape
         dq = (raw.astype(jnp.float32).reshape(c, blk // qchunk, qchunk)
               * s_ref[...][:, :, None]).reshape(c, blk)
-        t = dq.astype(jnp.float64)
+        t = dq.astype(tile_dtype)
     else:
-        t = raw.astype(jnp.float64)
+        t = raw.astype(tile_dtype)
     if b_ref is not None:
         t = t + b_ref[...][None, :]
     return t
@@ -127,7 +137,13 @@ def _assemble(data: np.ndarray, *, lead: int,
     args = [np.array([lead], np.int32)]
     specs = [pl.BlockSpec((1,), lambda i: (0,))]
     if acc is not None:
-        args.append(_pad_cols(np.asarray(acc, np.float64), total))
+        if not isinstance(acc, np.ndarray) and acc.shape[-1] == total:
+            # already-padded device array (streaming out_padded chain):
+            # pass through untouched so successive arrivals stay one
+            # async dispatch chain — no host sync, no copy
+            args.append(acc)
+        else:
+            args.append(_pad_cols(np.asarray(acc, np.float64), total))
         specs.append(pl.BlockSpec((blk,), lambda i: (i,)))
     args.append(_pad_cols(data, total))
     specs.append(pl.BlockSpec((c, blk), lambda i: (0, i)))
@@ -156,19 +172,24 @@ def _unpack(refs, *, q8: bool, has_base: bool, extra: int):
 # fused weighted sum (FedAvg / streaming fold)
 # ---------------------------------------------------------------------------
 def _wsum_kernel(*refs, q8: bool, has_base: bool, has_acc: bool,
-                 qchunk: int):
+                 qchunk: int, tile_dtype):
     n_ref, head, d_ref, s_ref, b_ref, (w_ref, o_ref) = _unpack(
         refs, q8=q8, has_base=has_base, extra=1 if has_acc else 0)
-    t = _decode_tile(d_ref, s_ref, b_ref, qchunk=qchunk)
-    t = t * w_ref[...][:, None]
+    t = _decode_tile(d_ref, s_ref, b_ref, qchunk=qchunk,
+                     tile_dtype=tile_dtype)
+    # fp32 tiles: weights cast down so the scale multiply runs at VPU
+    # rate; the fp64-dtype cast below is the identity and preserves the
+    # bitwise contract of the default path
+    t = t * w_ref[...].astype(t.dtype)[:, None]
 
     def body(c, a):
-        return a + jax.lax.dynamic_index_in_dim(t, c, 0, keepdims=False)
+        row = jax.lax.dynamic_index_in_dim(t, c, 0, keepdims=False)
+        return a + row.astype(jnp.float64)     # the fp64 carry
 
     if has_acc:
         init, lo = head[0][...], 0
     else:
-        init, lo = t[0], 1
+        init, lo = t[0].astype(jnp.float64), 1
     # n_ref (a runtime scalar) keeps the loop a genuine while loop — see
     # the module docstring for why unrolling would break bitwise parity
     o_ref[...] = jax.lax.fori_loop(lo, n_ref[0], body, init)
@@ -180,14 +201,33 @@ def weighted_sum(data: np.ndarray, weights: np.ndarray, *,
                  base: Optional[np.ndarray] = None,
                  acc: Optional[np.ndarray] = None,
                  block: Optional[int] = None,
-                 interpret: bool = True) -> np.ndarray:
+                 interpret: bool = True,
+                 out_padded: bool = False,
+                 tile_dtype: str = "float64") -> np.ndarray:
     """``(acc +) sum_c weights[c] * decode(data[c])`` as one fused pass.
 
     ``data``: (C, N) fp32/fp64/bf16 or int8 (with ``scales`` (C, S)).
     ``base``: shared (N,) fp64 round-start vector for delta payloads.
     ``acc``: (N,) fp64 running accumulator (the streaming arrival-order
     fold); when given, all C rows fold *into* it.  Returns (N,) fp64.
+
+    ``out_padded=True`` returns the block-padded device array itself
+    (length a multiple of the block size) instead of a sliced host copy;
+    feeding it back as ``acc`` under the same geometry skips the
+    per-arrival pad + slice + host round-trip entirely, so successive
+    streaming arrivals form one asynchronous dispatch chain (decode of
+    arrival k+1 overlaps the device fold of arrival k).
+
+    ``tile_dtype="float32"`` runs the decode/scale tile math in fp32 with
+    an fp64 accumulate (the TPU production scheme — see `_decode_tile`);
+    it requires ``base=None`` and relaxes the bitwise contract to a
+    relative tolerance.
     """
+    if tile_dtype not in ("float64", "float32"):
+        raise ValueError(f"tile_dtype {tile_dtype!r}")
+    if tile_dtype == "float32" and base is not None:
+        raise ValueError("tile_dtype='float32' requires base=None "
+                         "(defer the delta base to finalize)")
     c, n = data.shape
     if n == 0:
         return np.zeros(0, np.float64) if acc is None else np.asarray(acc)
@@ -199,7 +239,8 @@ def weighted_sum(data: np.ndarray, weights: np.ndarray, *,
 
     kern = functools.partial(_wsum_kernel, q8=data.dtype == np.int8,
                              has_base=base is not None,
-                             has_acc=acc is not None, qchunk=qchunk)
+                             has_acc=acc is not None, qchunk=qchunk,
+                             tile_dtype=np.dtype(tile_dtype))
     with jax.experimental.enable_x64():
         out = pl.pallas_call(
             kern, grid=(total // blk,), in_specs=specs,
@@ -207,6 +248,8 @@ def weighted_sum(data: np.ndarray, weights: np.ndarray, *,
             out_shape=jax.ShapeDtypeStruct((total,), jnp.float64),
             interpret=interpret,
         )(*args)
+        if out_padded:
+            return out                  # padded device array, no sync
         return np.array(out[:n])        # writable copy
 
 

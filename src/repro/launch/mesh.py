@@ -26,3 +26,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_local_mesh(data: int = 1, model: int = 1):
     """Tiny mesh over however many devices exist (tests on CPU)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_agg_mesh(shards: int):
+    """1-D ("data",) mesh for the sharded server aggregation state.
+
+    The FL server's flat fp64 accumulator and FedOpt moments split into
+    ``shards`` contiguous ranges over this axis (see
+    :func:`repro.sharding.shard_bounds`); each range's fused
+    decode+scale+accumulate kernel is pinned to the matching device.  On
+    CPU CI the devices are simulated with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+    """
+    return jax.make_mesh((shards,), ("data",))

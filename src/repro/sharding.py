@@ -304,3 +304,42 @@ def model_axis_size() -> int:
     if mesh is None:
         return 1
     return _mesh_axis_sizes(mesh).get("model", 1)
+
+
+# ---------------------------------------------------------------------------
+# Server aggregation-state sharding (FL side)
+# ---------------------------------------------------------------------------
+def shard_bounds(total: int, num_shards: int,
+                 align: int = 1) -> Tuple[Tuple[int, int], ...]:
+    """Contiguous ``[lo, hi)`` element ranges splitting a flat ``total``-
+    element vector across ``num_shards`` — the 1-D column partition the
+    sharded server aggregation state lives on (ROADMAP "sharded server
+    state").
+
+    Every boundary is a multiple of ``align`` (pass the int8 scale-window
+    size so quantized scale chunks never straddle shards and per-shard
+    Pallas block geometry stays qchunk-aligned), so shard sizes differ by
+    at most ``align``; trailing shards may be empty when ``total`` is
+    small.  The per-shard fp64 accumulator is therefore at most
+    ``ceil(total / num_shards)`` rounded up to ``align`` — within the
+    (1/num_shards + 10%) single-host-footprint budget for any realistic
+    model size.
+    """
+    if num_shards <= 0:
+        raise ValueError(f"num_shards must be positive, got {num_shards}")
+    if align <= 0:
+        raise ValueError(f"align must be positive, got {align}")
+    per = -(-total // num_shards)           # ceil
+    per = -(-per // align) * align          # round up to alignment
+    bounds = []
+    for i in range(num_shards):
+        lo = min(i * per, total)
+        hi = min(lo + per, total)
+        bounds.append((lo, hi))
+    return tuple(bounds)
+
+
+def agg_spec(mesh: Mesh) -> P:
+    """PartitionSpec for the flat aggregation vector on an agg mesh: the
+    single dimension sharded over the "data" axis."""
+    return P("data" if "data" in mesh.axis_names else mesh.axis_names[0])

@@ -438,3 +438,157 @@ def test_empty_layout_is_safe_on_pallas():
     fp = FlatParams.zeros(layout)
     out = K.weighted_mean([(fp, 1.0)], layout, backend="pallas")
     assert out.layout.total_size == 0
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded streaming fold: shard-count / overlap / placement invariance
+# (the shard-cpu CI lane re-runs these under
+#  XLA_FLAGS=--xla_force_host_platform_device_count=8)
+# ---------------------------------------------------------------------------
+SHARD_CODECS = ("flat", "bf16", "q8", "q8_delta_quant")
+
+
+def _fold(layout, flats, *, backend, shards=None, overlap=None, **kw):
+    s = K.StreamingWeightedSum(layout, backend=backend, shards=shards,
+                               overlap=overlap, **kw)
+    for i, fp in enumerate(flats):
+        s.add(fp, 3.0 + i)
+    return s.finalize()
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("codec", SHARD_CODECS)
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_sharded_fold_bitwise_across_shard_counts(codec, backend):
+    """finalize() must not depend on how the accumulator is split: 1, 2
+    and 8 shards x both backends agree bitwise (the fold is pure
+    elementwise ops in arrival order on every path)."""
+    layout, flats = make_payloads("big_unaligned", codec, 5, seed=21)
+    want = _fold(layout, flats, backend="numpy", shards=1, overlap=False)
+    for shards in (2, 8):
+        got = _fold(layout, flats, backend=backend, shards=shards,
+                    overlap=False)
+        assert_flat_ulp(got, want, maxulp=0)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("codec", SHARD_CODECS)
+def test_sharded_overlap_is_bitwise(codec):
+    """The decode thread must change wall-clock only: FIFO job order
+    keeps the (arrival, shard) fold order of the serial path."""
+    layout, flats = make_payloads("big_unaligned", codec, 5, seed=22)
+    got = _fold(layout, flats, backend="numpy", shards=8, overlap=True)
+    want = _fold(layout, flats, backend="numpy", shards=8, overlap=False)
+    assert_flat_ulp(got, want, maxulp=0)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("codec", ["flat", "bf16", "q8"])
+def test_sharded_matches_single_host_non_delta(codec):
+    """Non-delta payloads: the deferred-base algebra is vacuous, so the
+    sharded fold equals the frozen single-host accumulator bitwise."""
+    layout, flats = make_payloads("big_unaligned", codec, 5, seed=23)
+    legacy = _fold(layout, flats, backend="numpy")
+    got = _fold(layout, flats, backend="numpy", shards=8, overlap=False)
+    assert_flat_ulp(got, legacy, maxulp=0)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("codec", ["q8_delta_flat", "q8_delta_quant",
+                                   "bf16_delta"])
+def test_sharded_delta_close_to_single_host(codec):
+    """Deferred bases regroup the summation (sum w_k(d_k+b) folded as
+    sum w_k d_k + W b): <=1 ULP of the fp32 output leaves vs the
+    per-arrival reconstruction."""
+    layout, flats = make_payloads("big_unaligned", codec, 5, seed=24)
+    legacy = _fold(layout, flats, backend="numpy")
+    got = _fold(layout, flats, backend="numpy", shards=4, overlap=False)
+    assert_flat_ulp(got, legacy, maxulp=1)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_sharded_fault_partial_round_bitwise(backend):
+    """Straggler faults (PR 2 semantics): a round that aggregates only
+    the arrived subset is still shard-count invariant."""
+    layout, flats = make_payloads("big_unaligned", "q8_delta_quant", 6,
+                                  seed=25)
+    arrived = flats[:2] + flats[4:]          # clients 2, 3 timed out
+    want = _fold(layout, arrived, backend="numpy", shards=1, overlap=False)
+    got = _fold(layout, arrived, backend=backend, shards=8, overlap=False)
+    assert_flat_ulp(got, want, maxulp=0)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_sharded_mixed_codec_arrivals(backend):
+    """A raw straggler interleaved with q8 clients: per-arrival fallback
+    (and per-shard geometry retire on the Pallas path) must not change
+    the elementwise fold."""
+    layout, quants = make_payloads("big_unaligned", "q8", 3, seed=26)
+    _, raws = make_payloads("big_unaligned", "flat", 2, seed=27)
+    mixed = [quants[0], raws[0], quants[1], raws[1], quants[2]]
+    want = _fold(layout, mixed, backend="numpy", shards=1, overlap=False)
+    got = _fold(layout, mixed, backend=backend, shards=8, overlap=False)
+    assert_flat_ulp(got, want, maxulp=0)
+
+
+@pytest.mark.shard
+def test_sharded_f32_tile_with_f64_carry_tolerance():
+    """The TPU tile scheme (fp32 decode/scale + fp64 accumulate) vs the
+    fp64 oracle: per-arrival fp32 rounding only, no compounding drift."""
+    layout, flats = make_payloads("big_unaligned", "q8", 5, seed=28)
+    oracle = _fold(layout, flats, backend="pallas", shards=2,
+                   overlap=False)
+    got = _fold(layout, flats, backend="pallas", shards=2, overlap=False,
+                tile_dtype="float32")
+    for g, w in zip(got.to_arrays(), oracle.to_arrays()):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.shard
+def test_sharded_mesh_placement_bitwise():
+    """An explicit mesh pins each shard's kernel to a device; placement
+    must be invisible in the result.  Needs >1 simulated device (the
+    shard-cpu CI lane forces 8)."""
+    jax = pytest.importorskip("jax")
+    if jax.device_count() < 2:
+        pytest.skip("single-device host; shard-cpu lane covers this")
+    from repro.launch.mesh import make_agg_mesh
+
+    mesh = make_agg_mesh(min(8, jax.device_count()))
+    layout, flats = make_payloads("big_unaligned", "q8", 4, seed=29)
+    assert K.StreamingWeightedSum(layout, mesh=mesh).shards \
+        == mesh.devices.size
+    want = _fold(layout, flats, backend="numpy",
+                 shards=mesh.devices.size, overlap=False)
+    got = _fold(layout, flats, backend="pallas", mesh=mesh)
+    assert_flat_ulp(got, want, maxulp=0)
+
+
+@pytest.mark.shard
+@pytest.mark.parametrize("name", ["fedavgm", "fedadam", "fedyogi"])
+def test_sharded_fedopt_moments_match_over_rounds(name):
+    """FedOpt server state (velocity / m / v) sharded vs single-vector
+    over 3 rounds: the update is elementwise, so the returned parameters
+    must match bitwise every round."""
+    from repro.fl.messages import FitRes
+    from repro.fl.strategy import make_strategy
+
+    rng = np.random.default_rng(30)
+    shapes = [(64, 8), (1031,), (3,)]
+    sharded = make_strategy(name, shards=4)
+    exact = make_strategy(name, low_memory=True)
+    cur_s = [np.zeros(s, np.float32) for s in shapes]
+    cur_e = [np.zeros(s, np.float32) for s in shapes]
+    for rnd in (1, 2, 3):
+        results = []
+        for c in range(5):
+            arrays = [rng.normal(0, 1 + c, s).astype(np.float32)
+                      for s in shapes]
+            results.append((f"site-{c}", FitRes(arrays, 10 + c, {})))
+        got, _ = sharded.aggregate_fit(rnd, results, [], cur_s)
+        want, _ = exact.aggregate_fit(rnd, results, [], cur_e)
+        for g, w in zip(got, want):
+            np.testing.assert_array_equal(g, w, err_msg=name)
+        cur_s, cur_e = got, want
