@@ -1,0 +1,22 @@
+"""Project-specific invariant checkers (stdlib ``ast`` only, no deps).
+
+The repo carries invariants that ordinary linters cannot see (see
+``docs/INVARIANTS.md``): the bitwise-reproducibility contract of the
+aggregation fold, the lock discipline of the threaded runtime, the
+borrow-only zero-copy decode views, the ``0xF0``–``0xFF`` codec-byte
+registry, and the monotonic-deadline rule.  ``repro.analysis`` turns
+them into machine-checked findings:
+
+    PYTHONPATH=src python -m repro.analysis src/ tests/ --strict
+
+Findings can be suppressed per line with a justified pragma::
+
+    something_flagged()  # repro: allow[rule-id] reason=why it is safe
+
+A bare ``allow`` without a ``reason=`` is itself a finding
+(``bare-allow``), as is an ``allow`` naming an unknown rule
+(``unknown-rule``) — suppressions must stay auditable.
+"""
+from repro.analysis.core import (  # noqa: F401
+    ALL_RULES, Finding, main, run_analysis,
+)

@@ -1,0 +1,233 @@
+"""Zero-copy aliasing rules (``alias-writeable``, ``alias-mutation``).
+
+The wire decode path wraps received bytes with ``np.frombuffer`` and
+hands the views to the aggregation fold — they alias the transport
+buffer and are **borrow-only by contract** (fl/messages.py).  Likewise
+``tile_source(...)`` tiles and the delta-decode base chunks
+(``.base``-receiver ``f64_chunk``/``decode_chunk`` reads, the
+``_chunk_cache``) are shared, cached state: an in-place write corrupts
+every other borrower *and* the fig5 bitwise contract.
+
+- ``alias-writeable``: a ``np.frombuffer`` view must either be copied
+  immediately (``np.frombuffer(...).copy()``) or have
+  ``view.flags.writeable = False`` set in the same function before use —
+  bytes-backed views are born read-only but bytearray/memoryview-backed
+  ones (real receive buffers) are writable unless frozen.
+- ``alias-mutation``: any write into a tracked borrow-only view —
+  subscript/slice stores, ``+=`` style in-place ops, mutating ndarray
+  methods (``fill``/``sort``/...), ``np.copyto(view, ...)``,
+  ``out=view``, or re-enabling ``flags.writeable``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Optional
+
+from repro.analysis.core import Check, Finding, Module
+
+_NDARRAY_MUTATORS = {"fill", "sort", "partition", "put", "itemset",
+                     "setfield", "resize", "byteswap"}
+#: chained calls on a fresh frombuffer result that materialize a copy
+_COPYING_CHAIN = {"copy", "tobytes", "astype"}
+_BORROW_CALLS = {"f64_chunk", "decode_chunk"}
+
+
+def _call_attr(node: ast.AST) -> Optional[str]:
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+        return node.func.attr
+    return None
+
+
+class _FuncScan:
+    """Single forward pass over one function body (no flow analysis:
+    straight-line discipline is the convention being enforced)."""
+
+    def __init__(self, mod: Module, body):
+        self.mod = mod
+        self.body = body
+        self.tracked: Dict[str, str] = {}    # var -> 'frombuffer' | 'view'
+        self.frozen: set = set()
+        self.def_line: Dict[str, int] = {}
+        self.base_aliases: set = set()       # locals bound from `<x>.base`
+        self.findings = []
+
+    def run(self):
+        for stmt in self.body:
+            self._stmt(stmt)
+        for name, kind in self.tracked.items():
+            if kind == "frombuffer" and name not in self.frozen:
+                line = self.def_line[name]
+                self.findings.append(Finding(
+                    "alias-writeable", self.mod.path, line, 0,
+                    f"np.frombuffer view {name!r} is never frozen: set "
+                    f"`{name}.flags.writeable = False` before use (or "
+                    ".copy() immediately) — bytearray-backed receive "
+                    "buffers stay writable otherwise"))
+        return self.findings
+
+    # ------------------------------------------------------------------
+    def _stmt(self, stmt: ast.stmt) -> None:
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+            tgt = stmt.targets[0]
+            if isinstance(tgt, ast.Name):
+                self._bind(tgt.id, stmt.value, stmt.lineno)
+                self._scan_expr(stmt.value)
+                return
+            if self._freeze_target(tgt, stmt.value):
+                return
+            self._check_store_target(tgt, stmt.lineno)
+            self._scan_expr(stmt.value)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            tgt = stmt.target
+            if isinstance(tgt, ast.Name) and tgt.id in self.tracked:
+                self._mutation(tgt.id, stmt.lineno, "augmented assignment")
+            else:
+                self._check_store_target(tgt, stmt.lineno)
+            self._scan_expr(stmt.value)
+            return
+        # recurse into compound statements, expressions, returns...
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                self._stmt(child)
+            elif isinstance(child, ast.expr):
+                self._scan_expr(child)
+            elif isinstance(child, (ast.withitem, ast.excepthandler)):
+                for sub in ast.iter_child_nodes(child):
+                    if isinstance(sub, ast.stmt):
+                        self._stmt(sub)
+                    elif isinstance(sub, ast.expr):
+                        self._scan_expr(sub)
+
+    def _bind(self, name: str, value: ast.expr, line: int) -> None:
+        kind = self._classify(value)
+        if kind:
+            self.tracked[name] = kind
+            self.def_line[name] = line
+            self.frozen.discard(name)
+        else:
+            self.tracked.pop(name, None)
+            self.frozen.discard(name)
+            if (isinstance(value, ast.Attribute)
+                    and value.attr == "base"):
+                self.base_aliases.add(name)
+
+    def _classify(self, value: ast.expr) -> Optional[str]:
+        attr = _call_attr(value)
+        if attr == "frombuffer":
+            return "frombuffer"
+        if attr == "tile_source":
+            return "view"
+        if attr in _BORROW_CALLS:
+            recv = value.func.value
+            if (isinstance(recv, ast.Attribute) and recv.attr == "base") \
+                    or (isinstance(recv, ast.Name)
+                        and recv.id in self.base_aliases):
+                return "view"
+        if isinstance(value, ast.Attribute):
+            if value.attr == "_chunk_cache":
+                return "view"
+            # X.data / X.scales of a tracked view is still the view
+            if (value.attr in ("data", "scales")
+                    and isinstance(value.value, ast.Name)
+                    and value.value.id in self.tracked):
+                return "view"
+        if isinstance(value, ast.Subscript):
+            base = value.value
+            if isinstance(base, ast.Attribute) \
+                    and base.attr == "_chunk_cache":
+                return "view"
+            # slicing a tracked view yields a view of the same buffer
+            if isinstance(base, ast.Name) and base.id in self.tracked:
+                return "view"
+        return None
+
+    # ------------------------------------------------------------------
+    def _freeze_target(self, tgt: ast.expr, value: ast.expr) -> bool:
+        """``X.flags.writeable = <bool>`` — freeze or illegal thaw."""
+        if (isinstance(tgt, ast.Attribute) and tgt.attr == "writeable"
+                and isinstance(tgt.value, ast.Attribute)
+                and tgt.value.attr == "flags"
+                and isinstance(tgt.value.value, ast.Name)):
+            name = tgt.value.value.id
+            if name in self.tracked:
+                if isinstance(value, ast.Constant) and value.value is False:
+                    self.frozen.add(name)
+                else:
+                    self._mutation(name, tgt.lineno,
+                                   "re-enabling flags.writeable")
+            return True
+        return False
+
+    def _check_store_target(self, tgt: ast.expr, line: int) -> None:
+        while isinstance(tgt, (ast.Subscript, ast.Attribute)):
+            if isinstance(tgt, ast.Subscript) \
+                    and isinstance(tgt.value, ast.Name) \
+                    and tgt.value.id in self.tracked:
+                self._mutation(tgt.value.id, line, "subscript store")
+                return
+            tgt = tgt.value
+
+    def _scan_expr(self, expr: ast.expr) -> None:
+        for node in ast.walk(expr):
+            if not isinstance(node, ast.Call):
+                continue
+            f = node.func
+            if isinstance(f, ast.Attribute):
+                if (f.attr in _NDARRAY_MUTATORS
+                        and isinstance(f.value, ast.Name)
+                        and f.value.id in self.tracked):
+                    self._mutation(f.value.id, node.lineno,
+                                   f".{f.attr}() in-place method")
+                if (f.attr == "copyto"
+                        and node.args
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id in self.tracked):
+                    self._mutation(node.args[0].id, node.lineno,
+                                   "np.copyto destination")
+            for kw in node.keywords:
+                if (kw.arg == "out" and isinstance(kw.value, ast.Name)
+                        and kw.value.id in self.tracked):
+                    self._mutation(kw.value.id, node.lineno,
+                                   "out= destination")
+
+    def _mutation(self, name: str, line: int, how: str) -> None:
+        self.findings.append(Finding(
+            "alias-mutation", self.mod.path, line, 0,
+            f"in-place write ({how}) into borrow-only view {name!r}: "
+            "frombuffer/tile_source/base-chunk views alias shared "
+            "buffers — materialize a copy first"))
+
+
+class AliasCheck(Check):
+    rules = ("alias-writeable", "alias-mutation")
+
+    def visit(self, mod: Module) -> Iterable[Finding]:
+        if "frombuffer" not in mod.text and "tile_source" not in mod.text \
+                and "_chunk_cache" not in mod.text:
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from _FuncScan(mod, node.body).run()
+        # inline (unbound) frombuffer calls can never be frozen: require
+        # an immediate copy-producing chain
+        parents = {}
+        for node in ast.walk(mod.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+        for node in ast.walk(mod.tree):
+            if _call_attr(node) == "frombuffer":
+                par = parents.get(node)
+                bound = isinstance(par, ast.Assign) and len(
+                    par.targets) == 1 and isinstance(
+                    par.targets[0], ast.Name)
+                chained = (isinstance(par, ast.Attribute)
+                           and par.attr in _COPYING_CHAIN | {"reshape",
+                                                             "view"})
+                if not bound and not chained:
+                    yield Finding(
+                        "alias-writeable", mod.path, node.lineno,
+                        node.col_offset,
+                        "unbound np.frombuffer result cannot be frozen: "
+                        "bind it and set flags.writeable = False, or "
+                        "chain .copy() immediately")

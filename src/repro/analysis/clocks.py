@@ -1,0 +1,48 @@
+"""``monotonic-clock``: wall clock is banned for deadlines and TTLs.
+
+``time.time()`` jumps under NTP steps/leap smearing; a backwards jump can
+abort a healthy round, a forward jump expires every tombstone at once.
+Runtime code must use ``time.monotonic()`` for deadline/TTL arithmetic
+and ``time.perf_counter()`` for duration measurement.  Wall clock is
+allowed only where a timestamp is *reported to humans* — suppress those
+sites with ``# repro: allow[monotonic-clock] reason=...``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import Check, Finding, Module
+
+
+class ClockCheck(Check):
+    rules = ("monotonic-clock",)
+
+    def scope(self, mod: Module) -> bool:
+        # runtime source tree only (tests may freely measure wall time)
+        return "repro" in mod.segments
+
+    def visit(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Call):
+                f = node.func
+                if (isinstance(f, ast.Attribute)
+                        and f.attr in ("time", "time_ns")
+                        and isinstance(f.value, ast.Name)
+                        and f.value.id == "time"):
+                    yield Finding(
+                        "monotonic-clock", mod.path, node.lineno,
+                        node.col_offset,
+                        f"time.{f.attr}() is wall clock: use "
+                        "time.monotonic() for deadlines/TTLs or "
+                        "time.perf_counter() for durations (allow only "
+                        "for human-reported timestamps)")
+            elif isinstance(node, ast.ImportFrom) and node.module == "time":
+                for alias in node.names:
+                    if alias.name in ("time", "time_ns"):
+                        yield Finding(
+                            "monotonic-clock", mod.path, node.lineno,
+                            node.col_offset,
+                            "importing wall-clock time.time directly "
+                            "hides deadline hazards; import the module "
+                            "and use time.monotonic()")

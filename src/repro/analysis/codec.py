@@ -1,0 +1,175 @@
+"""Codec-byte registry rules (``codec-literal``, ``codec-dispatch``).
+
+The wire reserves ``0xF0``–``0xFF`` as version bytes (legacy msgpack
+frames can never start there).  Every byte in that range must originate
+from the single registry table ``WIRE_MAGICS`` in ``fl/flat.py``; a hex
+literal anywhere else is how two files silently claim the same byte.
+Decoder dispatches over the payload magics must be exhaustive: cover
+every registered payload codec or raise ``UnsupportedCodec``.
+
+Detection notes:
+
+- only literals *written in hex* are flagged (``0xF1``), so ordinary
+  decimal ints 240–255 (counts, clip bounds) never false-positive;
+- ``NAME = WIRE_MAGICS["key"]`` assignments register ``NAME`` as a magic
+  alias project-wide (imports then just use the name);
+- a *dispatch* is a function comparing one subject against >= 2 distinct
+  payload-magic aliases with ``==``; membership predicates
+  (``b[0] in (A, B)``) and single comparisons are not dispatches.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Check, Finding, Module
+
+# decimal on purpose: the rule below flags hex-written bytes in this range
+MAGIC_LO, MAGIC_HI = 240, 255
+
+
+def _is_hex_literal(mod: Module, node: ast.Constant) -> bool:
+    return mod.src_at(node.lineno, node.col_offset, 2).lower() == "0x"
+
+
+def _registry_lines(tree: ast.AST) -> Set[int]:
+    """Line span of the WIRE_MAGICS / WIRE_MAGIC_LO / WIRE_MAGIC_HI /
+    PAYLOAD_CODEC_MAGICS assignments (the only place bytes may appear)."""
+    lines: Set[int] = set()
+    for node in ast.walk(tree):
+        names = _assign_names(node)
+        if names & {"WIRE_MAGICS", "WIRE_MAGIC_LO", "WIRE_MAGIC_HI",
+                    "PAYLOAD_CODEC_MAGICS"}:
+            lines.update(range(node.lineno, (node.end_lineno or
+                                             node.lineno) + 1))
+    return lines
+
+
+def _assign_names(node: ast.AST) -> Set[str]:
+    if isinstance(node, ast.Assign):
+        return {t.id for t in node.targets if isinstance(t, ast.Name)}
+    if isinstance(node, ast.AnnAssign) and isinstance(node.target, ast.Name):
+        return {node.target.id}
+    return set()
+
+
+def _raises_unsupported(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Raise) and node.exc is not None:
+            exc = node.exc
+            name = None
+            if isinstance(exc, ast.Call):
+                exc = exc.func
+            if isinstance(exc, ast.Name):
+                name = exc.id
+            elif isinstance(exc, ast.Attribute):
+                name = exc.attr
+            if name == "UnsupportedCodec":
+                return True
+    return False
+
+
+class CodecCheck(Check):
+    rules = ("codec-literal", "codec-dispatch")
+
+    def __init__(self):
+        #: alias name -> registry key, from ``X = WIRE_MAGICS["k"]``
+        self.magic_names: Dict[str, str] = {}
+        #: payload-codec keys declared by the registry module
+        self.payload_keys: Set[str] = set()
+        self.registry_path: Optional[str] = None
+        #: (mod, funcdef, compared alias names, has raise) per candidate
+        self.dispatches: List[Tuple[Module, ast.AST, Set[str], bool]] = []
+
+    def visit(self, mod: Module) -> Iterable[Finding]:
+        allowed: Set[int] = set()
+        defines_registry = any(
+            "WIRE_MAGICS" in _assign_names(n) for n in ast.walk(mod.tree))
+        if defines_registry:
+            if mod.basename == "flat.py" and self.registry_path is None:
+                self.registry_path = mod.path
+                allowed = _registry_lines(mod.tree)
+                self._read_payload_keys(mod.tree)
+            else:
+                yield Finding(
+                    "codec-literal", mod.path, 1, 0,
+                    "WIRE_MAGICS registry redefined here; fl/flat.py is "
+                    "the single source of truth for 0xF0-0xFF")
+        # alias definitions: NAME = WIRE_MAGICS["key"] (any module)
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Assign)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)
+                    and isinstance(node.value, ast.Subscript)):
+                sub = node.value
+                base = sub.value
+                base_name = base.attr if isinstance(base, ast.Attribute) \
+                    else base.id if isinstance(base, ast.Name) else None
+                if (base_name == "WIRE_MAGICS"
+                        and isinstance(sub.slice, ast.Constant)
+                        and isinstance(sub.slice.value, str)):
+                    self.magic_names[node.targets[0].id] = sub.slice.value
+        # hex version-byte literals outside the registry table
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Constant)
+                    and type(node.value) is int
+                    and MAGIC_LO <= node.value <= MAGIC_HI
+                    and node.lineno not in allowed
+                    and _is_hex_literal(mod, node)):
+                yield Finding(
+                    "codec-literal", mod.path, node.lineno,
+                    node.col_offset,
+                    f"raw version byte 0x{node.value:02X}: wire bytes "
+                    "0xF0-0xFF must come from WIRE_MAGICS in fl/flat.py "
+                    "(import the named constant)")
+        # candidate dispatch functions (judged in finalize once the
+        # registry module has declared the payload set)
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                compared = self._eq_compared_names(node)
+                if len(compared) >= 2:
+                    self.dispatches.append(
+                        (mod, node, compared, _raises_unsupported(node)))
+
+    def _read_payload_keys(self, tree: ast.AST) -> None:
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name)
+                            and t.id == "PAYLOAD_CODEC_MAGICS"
+                            for t in node.targets)
+                    and isinstance(node.value, (ast.Tuple, ast.List))):
+                self.payload_keys = {
+                    e.value for e in node.value.elts
+                    if isinstance(e, ast.Constant)
+                    and isinstance(e.value, str)}
+
+    @staticmethod
+    def _eq_compared_names(fn: ast.AST) -> Set[str]:
+        names: Set[str] = set()
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Compare) and any(
+                    isinstance(op, ast.Eq) for op in node.ops):
+                for side in [node.left, *node.comparators]:
+                    if isinstance(side, ast.Name):
+                        names.add(side.id)
+        return names
+
+    def finalize(self) -> Iterable[Finding]:
+        if not self.payload_keys:
+            self.dispatches.clear()
+            return
+        for mod, fn, compared, has_raise in self.dispatches:
+            keys = {self.magic_names[n] for n in compared
+                    if n in self.magic_names
+                    and self.magic_names[n] in self.payload_keys}
+            if len(keys) < 2:
+                continue            # predicate, not a dispatch
+            if keys == self.payload_keys or has_raise:
+                continue
+            missing = sorted(self.payload_keys - keys)
+            yield Finding(
+                "codec-dispatch", mod.path, fn.lineno, fn.col_offset,
+                f"function {fn.name!r} dispatches on payload magics "
+                f"{sorted(keys)} but neither covers "
+                f"{missing} nor raises UnsupportedCodec on the rest")
+        self.dispatches.clear()

@@ -1,0 +1,298 @@
+"""Checker framework: module loading, suppressions, runner, CLI.
+
+Design (kept deliberately small):
+
+- A :class:`Module` is one parsed file: source text, AST, the comment map
+  (line -> text) and the ``# repro: allow[...]`` pragmas found on it.
+- A :class:`Check` sees every in-scope module via :meth:`Check.visit` and
+  may emit more findings from :meth:`Check.finalize` once the whole tree
+  has been seen (cross-module rules: codec registry, lock graphs).
+- Suppression is applied at the very end: a finding on line *L* is
+  suppressed by an ``allow`` pragma on *L* or on a comment-only line
+  *L - 1*.  Meta findings (``bare-allow``/``unknown-rule``/parse errors)
+  are never suppressible.
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import io
+import json
+import re
+import sys
+import tokenize
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+#: directory names the walker never descends into (the fixture corpus is
+#: full of seeded violations — it is analyzed only when passed explicitly)
+SKIP_DIRS = {"__pycache__", "_analysis_fixtures", ".git", ".venv",
+             "node_modules", ".mypy_cache", ".pytest_cache"}
+
+_ALLOW_RE = re.compile(
+    r"#\s*repro:\s*allow\[([^\]]*)\]\s*(?:reason=(.*))?")
+_GUARDED_BY_RE = re.compile(r"#\s*guarded-by:\s*([A-Za-z_]\w*)")
+
+#: rules that gate only under ``--strict`` (advisory otherwise)
+ADVISORY_RULES = frozenset({"dead-name"})
+
+#: rules whose findings can never be suppressed with an allow pragma
+META_RULES = frozenset({"bare-allow", "unknown-rule", "parse-error"})
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def to_json(self) -> Dict[str, object]:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] " \
+               f"{self.message}"
+
+
+@dataclass(frozen=True)
+class Allow:
+    rules: Tuple[str, ...]      # rule ids, or "*"
+    has_reason: bool
+    line: int
+
+
+class Module:
+    """One parsed source file plus its comment/pragma side tables."""
+
+    def __init__(self, path: str, text: str, tree: ast.AST,
+                 comments: Dict[int, str]):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = tree
+        self.comments = comments
+        self.allows: Dict[int, List[Allow]] = {}
+        #: lines holding ``# guarded-by: _lock`` annotations -> lock name
+        self.guard_notes: Dict[int, str] = {
+            ln: m.group(1) for ln, c in comments.items()
+            if (m := _GUARDED_BY_RE.search(c))}
+        parts = Path(path).parts
+        self.segments = frozenset(parts)
+        self.basename = parts[-1] if parts else path
+
+    def src_at(self, line: int, col: int, length: int = 4) -> str:
+        """Raw source text at a node position (hex-literal detection)."""
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1][col:col + length]
+        return ""
+
+    def is_suppressed(self, f: Finding) -> bool:
+        if f.rule in META_RULES:
+            return False
+        for ln in (f.line, f.line - 1):
+            if ln == f.line - 1:
+                # only a comment-only line above counts
+                text = self.lines[ln - 1].strip() if ln >= 1 else ""
+                if not text.startswith("#"):
+                    continue
+            for a in self.allows.get(ln, ()):
+                if "*" in a.rules or f.rule in a.rules:
+                    return True
+        return False
+
+
+class Check:
+    """Base class: override ``rules``, ``scope``, ``visit``, ``finalize``."""
+
+    rules: Tuple[str, ...] = ()
+
+    def scope(self, mod: Module) -> bool:
+        return True
+
+    def visit(self, mod: Module) -> Iterable[Finding]:
+        return ()
+
+    def finalize(self) -> Iterable[Finding]:
+        return ()
+
+
+def _collect_comments(text: str) -> Dict[int, str]:
+    comments: Dict[int, str] = {}
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+            if tok.type == tokenize.COMMENT:
+                comments[tok.start[0]] = tok.string
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        # fall back to a naive scan; good enough for pragma collection
+        for i, line in enumerate(text.splitlines(), 1):
+            if "#" in line:
+                comments[i] = line[line.index("#"):]
+    return comments
+
+
+def _parse_allows(mod: Module, known_rules: frozenset
+                  ) -> List[Finding]:
+    """Fill ``mod.allows``; bare/unknown pragmas are findings."""
+    meta: List[Finding] = []
+    for ln, comment in mod.comments.items():
+        m = _ALLOW_RE.search(comment)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(1).split(",") if r.strip())
+        reason = (m.group(2) or "").strip()
+        col = mod.lines[ln - 1].index("#") if ln <= len(mod.lines) else 0
+        if not reason:
+            meta.append(Finding(
+                "bare-allow", mod.path, ln, col,
+                "suppression without a reason= justification: "
+                "write `# repro: allow[rule] reason=<why it is safe>`"))
+        for r in rules:
+            if r != "*" and r not in known_rules:
+                meta.append(Finding(
+                    "unknown-rule", mod.path, ln, col,
+                    f"allow names unknown rule {r!r} (known: "
+                    f"{', '.join(sorted(known_rules))})"))
+        mod.allows.setdefault(ln, []).append(
+            Allow(rules, bool(reason), ln))
+    return meta
+
+
+def iter_files(roots: Sequence[str]) -> List[str]:
+    out: List[str] = []
+    for root in roots:
+        p = Path(root)
+        if p.is_file():
+            if p.suffix == ".py":
+                out.append(p.as_posix())
+            continue
+        if not p.is_dir():
+            raise FileNotFoundError(f"no such file or directory: {root}")
+        for sub in sorted(p.rglob("*.py")):
+            rel = sub.relative_to(p)
+            if any(part in SKIP_DIRS for part in rel.parts[:-1]):
+                continue
+            out.append(sub.as_posix())
+    # stable order, no duplicates
+    seen = set()
+    uniq = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def load_module(path: str) -> Tuple[Optional[Module], List[Finding]]:
+    try:
+        text = Path(path).read_text(encoding="utf-8")
+    except (OSError, UnicodeDecodeError) as e:
+        return None, [Finding("parse-error", path, 1, 0, f"unreadable: {e}")]
+    try:
+        tree = ast.parse(text, filename=path)
+    except SyntaxError as e:
+        return None, [Finding("parse-error", path, e.lineno or 1, 0,
+                              f"syntax error: {e.msg}")]
+    return Module(path, text, tree, _collect_comments(text)), []
+
+
+def _make_checks() -> List[Check]:
+    # local import: the check modules import this one for the base class
+    from repro.analysis.aliasing import AliasCheck
+    from repro.analysis.clocks import ClockCheck
+    from repro.analysis.codec import CodecCheck
+    from repro.analysis.deadnames import DeadNameCheck
+    from repro.analysis.determinism import DeterminismCheck
+    from repro.analysis.locks import LockCheck
+    return [LockCheck(), DeterminismCheck(), AliasCheck(), CodecCheck(),
+            ClockCheck(), DeadNameCheck()]
+
+
+def all_rules() -> frozenset:
+    rules = set(META_RULES)
+    for c in _make_checks():
+        rules.update(c.rules)
+    return frozenset(rules)
+
+
+ALL_RULES = all_rules()
+
+
+def run_analysis(roots: Sequence[str],
+                 only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run every checker over ``roots``; returns unsuppressed findings."""
+    checks = _make_checks()
+    if only:
+        wanted = set(only)
+        checks = [c for c in checks if wanted & set(c.rules)]
+    findings: List[Finding] = []
+    mods: Dict[str, Module] = {}
+    for path in iter_files(roots):
+        mod, meta = load_module(path)
+        findings.extend(meta)
+        if mod is None:
+            continue
+        mods[path] = mod
+        findings.extend(_parse_allows(mod, ALL_RULES))
+        for c in checks:
+            if c.scope(mod):
+                findings.extend(c.visit(mod))
+    for c in checks:
+        findings.extend(c.finalize())
+    if only:
+        wanted = set(only) | META_RULES
+        findings = [f for f in findings if f.rule in wanted]
+    out = [f for f in findings
+           if f.path not in mods or not mods[f.path].is_suppressed(f)]
+    return sorted(set(out), key=lambda f: (f.path, f.line, f.col, f.rule))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="project-specific invariant checkers "
+                    "(docs/INVARIANTS.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files or directories to analyze "
+                         "(default: src tests)")
+    ap.add_argument("--strict", action="store_true",
+                    help="advisory rules (dead-name) also gate the "
+                         "exit code")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--only", default="",
+                    help="comma-separated rule ids to run exclusively")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+    if args.list_rules:
+        print("\n".join(sorted(ALL_RULES)))
+        return 0
+    only = [r for r in args.only.split(",") if r] or None
+    if only:
+        unknown = set(only) - ALL_RULES
+        if unknown:
+            print(f"unknown rule(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+    try:
+        findings = run_analysis(args.paths or ["src", "tests"], only=only)
+    except FileNotFoundError as e:
+        print(str(e), file=sys.stderr)
+        return 2
+    gating = [f for f in findings
+              if args.strict or f.rule not in ADVISORY_RULES]
+    advisory = [f for f in findings if f not in gating]
+    if args.format == "json":
+        print(json.dumps({
+            "findings": [f.to_json() for f in findings],
+            "gating": len(gating), "advisory": len(advisory)}, indent=2))
+    else:
+        for f in findings:
+            tag = "" if f in gating else " (advisory)"
+            print(f.render() + tag)
+        n = len(findings)
+        print(f"{n} finding{'s' if n != 1 else ''} "
+              f"({len(gating)} gating, {len(advisory)} advisory)")
+    return 1 if gating else 0

@@ -1,0 +1,65 @@
+"""``dead-name``: unused imports in ``src/`` (pyflakes-level).
+
+Advisory by default, gating under ``--strict`` (the CI analysis lane).
+``__init__.py`` re-export surfaces are exempt, as is any import line
+carrying a ``# noqa`` marker.  Names listed in ``__all__`` count as
+used.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Set, Tuple
+
+from repro.analysis.core import Check, Finding, Module
+
+
+def _binding(alias: ast.alias) -> str:
+    if alias.asname:
+        return alias.asname
+    return alias.name.split(".")[0]
+
+
+class DeadNameCheck(Check):
+    rules = ("dead-name",)
+
+    def scope(self, mod: Module) -> bool:
+        return "repro" in mod.segments and mod.basename != "__init__.py"
+
+    def visit(self, mod: Module) -> Iterable[Finding]:
+        imports: Dict[str, Tuple[int, int, str]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.Import, ast.ImportFrom)):
+                if isinstance(node, ast.ImportFrom) \
+                        and node.module == "__future__":
+                    continue
+                comment = mod.comments.get(node.lineno, "")
+                end_comment = mod.comments.get(node.end_lineno or
+                                               node.lineno, "")
+                if "noqa" in comment or "noqa" in end_comment:
+                    continue
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    imports[_binding(alias)] = (
+                        node.lineno, node.col_offset, alias.name)
+        if not imports:
+            return
+        used: Set[str] = set()
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Name) and not isinstance(
+                    node.ctx, ast.Store):
+                used.add(node.id)
+        # __all__ strings count as usage (module re-export surface)
+        for node in ast.walk(mod.tree):
+            if (isinstance(node, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "__all__"
+                            for t in node.targets)
+                    and isinstance(node.value, (ast.List, ast.Tuple))):
+                used.update(e.value for e in node.value.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str))
+        for name, (line, col, target) in sorted(imports.items()):
+            if name not in used:
+                yield Finding(
+                    "dead-name", mod.path, line, col,
+                    f"imported name {name!r} ({target}) is never used")

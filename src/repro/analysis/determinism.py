@@ -1,0 +1,181 @@
+"""Determinism lint for the aggregation fold and kernel modules.
+
+The fig5 claim is *bitwise* equality across transports/backends, and the
+fold defends it with canonical node order, fp64 accumulation, and a
+runtime fori_loop trip count (kernels/agg_reduce.py docstring).  These
+rules flag the patterns that silently break it:
+
+- ``det-set-iter``: iterating a ``set`` (arrival/hash order) in an
+  aggregation module — node ids must be sorted before folding;
+- ``det-entropy``: ``time.*`` / ``random.*`` / legacy global
+  ``np.random.*`` in fold paths (seeded ``np.random.default_rng`` and
+  explicit ``Generator``/``SeedSequence`` plumbing are fine);
+- ``det-float-accum``: builtin ``sum()``/``math.fsum()`` inside a traced
+  (jnp/lax/pallas-using) function — Python-float reduction order is
+  invisible to the fold's pairing contract;
+- ``det-fori-trip``: a ``fori_loop`` upper bound that the tracer can
+  constant-fold (a literal, or shape arithmetic) — XLA then unrolls the
+  loop and LLVM's reassociation re-enables the FMA contraction the
+  runtime trip count exists to defeat.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable
+
+from repro.analysis.core import Check, Finding, Module
+
+#: np.random attributes that are deterministic-by-construction plumbing
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "Philox",
+                 "PCG64", "bit_generator", "BitGenerator"}
+
+#: fold-path modules for the accumulation-order rules
+_FOLD_BASENAMES = {"agg_kernels.py", "strategy.py", "legacy.py", "flat.py"}
+
+
+def _attr_chain(node: ast.AST):
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+def _uses_tracing(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and node.id in ("jnp", "lax", "pl"):
+            return True
+        if isinstance(node, ast.Attribute):
+            chain = _attr_chain(node)
+            if chain and chain[0] == "jax":
+                return True
+    return False
+
+
+def _foldable_bound(node: ast.AST) -> bool:
+    """True if the tracer sees this expression as a compile-time constant
+    (literals and array-shape arithmetic; any plain Name keeps it
+    runtime-valued and is accepted)."""
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, ast.Attribute):
+        return node.attr == "shape" or _foldable_bound(node.value)
+    if isinstance(node, ast.Subscript):
+        # x.shape[0] folds; x[0] on a runtime ref does not
+        return _foldable_bound(node.value) \
+            and isinstance(node.value, (ast.Attribute, ast.Subscript))
+    if isinstance(node, ast.BinOp):
+        return _foldable_bound(node.left) and _foldable_bound(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _foldable_bound(node.operand)
+    if isinstance(node, ast.Call):
+        f = node.func
+        if isinstance(f, ast.Name) and f.id in ("len", "int"):
+            return all(_foldable_bound(a) for a in node.args)
+    return False
+
+
+class DeterminismCheck(Check):
+    rules = ("det-set-iter", "det-entropy", "det-float-accum",
+             "det-fori-trip")
+
+    def scope(self, mod: Module) -> bool:
+        return ("fl" in mod.segments or "kernels" in mod.segments
+                or mod.basename == "sharding.py")
+
+    def visit(self, mod: Module) -> Iterable[Finding]:
+        yield from self._set_iter(mod)
+        yield from self._entropy(mod)
+        if mod.basename in _FOLD_BASENAMES or "kernels" in mod.segments:
+            yield from self._float_accum(mod)
+            yield from self._fori_trip(mod)
+
+    # ------------------------------------------------------------------
+    def _set_iter(self, mod: Module) -> Iterable[Finding]:
+        def iter_exprs():
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.For, ast.AsyncFor)):
+                    yield node.iter
+                elif isinstance(node, (ast.ListComp, ast.SetComp,
+                                       ast.DictComp, ast.GeneratorExp)):
+                    for gen in node.generators:
+                        yield gen.iter
+        for it in iter_exprs():
+            bad = isinstance(it, (ast.Set, ast.SetComp)) or (
+                isinstance(it, ast.Call)
+                and isinstance(it.func, ast.Name)
+                and it.func.id in ("set", "frozenset"))
+            if bad:
+                yield Finding(
+                    "det-set-iter", mod.path, it.lineno, it.col_offset,
+                    "iterating a set in an aggregation module: hash "
+                    "order leaks into the fold — sort first "
+                    "(sorted(...))")
+
+    def _entropy(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            if chain[0] == "time" and len(chain) == 2:
+                yield Finding(
+                    "det-entropy", mod.path, node.lineno, node.col_offset,
+                    f"time.{chain[1]}() in a fold path: aggregation "
+                    "must not depend on the clock")
+            elif chain[0] == "random" and len(chain) == 2:
+                yield Finding(
+                    "det-entropy", mod.path, node.lineno, node.col_offset,
+                    f"random.{chain[1]}() uses ambient global state; "
+                    "thread a seeded np.random.Generator instead")
+            elif (len(chain) >= 3 and chain[0] in ("np", "numpy")
+                    and chain[1] == "random"
+                    and chain[2] not in _NP_RANDOM_OK):
+                yield Finding(
+                    "det-entropy", mod.path, node.lineno, node.col_offset,
+                    f"legacy global np.random.{chain[2]}() is ambient "
+                    "state; use np.random.default_rng(seed)")
+
+    def _float_accum(self, mod: Module) -> Iterable[Finding]:
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if not _uses_tracing(fn):
+                continue
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = node.func
+                is_sum = isinstance(f, ast.Name) and f.id == "sum"
+                chain = _attr_chain(f)
+                is_fsum = chain == ("math", "fsum")
+                if is_sum or is_fsum:
+                    yield Finding(
+                        "det-float-accum", mod.path, node.lineno,
+                        node.col_offset,
+                        "builtin sum()/math.fsum() inside a traced "
+                        "function accumulates in Python-float order; "
+                        "use the fold's fp64 accumulator (jnp.sum / "
+                        "fori_loop carry)")
+
+    def _fori_trip(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or len(node.args) < 2:
+                continue
+            f = node.func
+            name = f.attr if isinstance(f, ast.Attribute) else \
+                f.id if isinstance(f, ast.Name) else None
+            if name != "fori_loop":
+                continue
+            if _foldable_bound(node.args[1]):
+                yield Finding(
+                    "det-fori-trip", mod.path, node.lineno,
+                    node.col_offset,
+                    "fori_loop trip count is constant-foldable: XLA "
+                    "unrolls it and LLVM re-enables FMA reassociation "
+                    "(the hazard the runtime n_ref[0] bound defeats) — "
+                    "pass the count through a runtime ref")

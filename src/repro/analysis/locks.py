@@ -1,0 +1,353 @@
+"""Lock discipline for the threaded runtime (``lock-order``,
+``guarded-by``).
+
+Per class, the checker collects ``self._x = threading.Lock/RLock/
+Condition(...)`` attributes, then walks every method tracking which of
+those locks are held (``with self._x:``), treating nested ``def``/
+``lambda`` bodies as fresh contexts (closures run later, typically on
+another thread, with nothing held).
+
+``lock-order``: nested acquisitions produce edges in a per-class lock
+graph — directly nested ``with`` blocks, and ``self.m()`` calls made
+while holding a lock contribute edges to every lock ``m`` (transitively)
+acquires.  A cycle is a potential deadlock; a self-edge on a
+non-reentrant ``Lock`` is a guaranteed one.
+
+``guarded-by``: an attribute annotated ``# guarded-by: _lock`` on its
+``__init__`` assignment must only be written while holding that lock;
+an *unannotated* attribute written both under some lock and under none
+(outside ``__init__``) is flagged as mixed discipline — the unlocked
+site is the race.  A ``# guarded-by: _lock`` on a method ``def`` line
+declares a lock-held helper: its body is analyzed with the lock held,
+and every call site must actually hold it.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from repro.analysis.core import Check, Finding, Module
+
+_LOCK_FACTORIES = {"Lock": False, "RLock": True, "Condition": True,
+                   "Semaphore": False, "BoundedSemaphore": False}
+
+#: container-mutating method names that count as writes to the receiver
+_MUTATORS = {"append", "appendleft", "add", "extend", "insert", "update",
+             "setdefault", "pop", "popitem", "popleft", "remove",
+             "discard", "clear"}
+
+
+def _self_attr(node: ast.AST) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _write_targets(stmt: ast.stmt) -> List[ast.expr]:
+    if isinstance(stmt, ast.Assign):
+        return list(stmt.targets)
+    if isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        return [stmt.target]
+    return []
+
+
+class _MethodScan(ast.NodeVisitor):
+    """One method (or nested-function) body: lock scopes, writes, calls."""
+
+    def __init__(self, lock_attrs: Set[str]):
+        self.lock_attrs = lock_attrs
+        self.held: List[str] = []
+        #: (outer, inner, line) for directly nested with-acquisitions
+        self.nest_edges: List[Tuple[str, str, int]] = []
+        #: every lock this method acquires anywhere
+        self.acquires: Set[str] = set()
+        #: (held_snapshot, called_method, line)
+        self.calls: List[Tuple[Tuple[str, ...], str, int]] = []
+        #: attr -> list of (held_snapshot, line)
+        self.writes: Dict[str, List[Tuple[Tuple[str, ...], int]]] = {}
+        self.nested: List[ast.AST] = []
+
+    # ---------------------------------------------------------- contexts
+    def visit_With(self, node: ast.With) -> None:
+        pushed = 0
+        for item in node.items:
+            attr = _self_attr(item.context_expr)
+            if attr in self.lock_attrs:
+                for outer in self.held:
+                    self.nest_edges.append((outer, attr, node.lineno))
+                self.held.append(attr)
+                self.acquires.add(attr)
+                pushed += 1
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in range(pushed):
+            self.held.pop()
+
+    def visit_FunctionDef(self, node):          # closure: fresh context
+        self.nested.append(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+    visit_Lambda = visit_FunctionDef
+
+    # ------------------------------------------------------------ events
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        attr = _self_attr(f)
+        if attr is not None:
+            self.calls.append((tuple(self.held), attr, node.lineno))
+        elif isinstance(f, ast.Attribute) and f.attr in _MUTATORS:
+            written = self._receiver_attr(f.value)
+            if written is not None:
+                self._record_write(written, node.lineno)
+        self.generic_visit(node)
+
+    def _receiver_attr(self, recv: ast.AST) -> Optional[str]:
+        """self.X or self.X[...] as a mutator receiver -> 'X'."""
+        if isinstance(recv, ast.Subscript):
+            recv = recv.value
+        return _self_attr(recv)
+
+    def _record_write(self, attr: str, line: int) -> None:
+        self.writes.setdefault(attr, []).append((tuple(self.held), line))
+
+    def _visit_write_stmt(self, stmt) -> None:
+        for tgt in _write_targets(stmt):
+            attr = _self_attr(tgt)
+            if attr is None and isinstance(tgt, ast.Subscript):
+                attr = _self_attr(tgt.value)
+            if attr is not None and attr not in self.lock_attrs:
+                self._record_write(attr, stmt.lineno)
+            # deletes/tuple targets: walk for self attrs
+            elif isinstance(tgt, (ast.Tuple, ast.List)):
+                for el in tgt.elts:
+                    a = _self_attr(el)
+                    if a is not None:
+                        self._record_write(a, stmt.lineno)
+        self.generic_visit(stmt)
+
+    visit_Assign = _visit_write_stmt
+    visit_AugAssign = _visit_write_stmt
+    visit_AnnAssign = _visit_write_stmt
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for tgt in node.targets:
+            attr = _self_attr(tgt)
+            if attr is None and isinstance(tgt, ast.Subscript):
+                attr = _self_attr(tgt.value)
+            if attr is not None:
+                self._record_write(attr, node.lineno)
+        self.generic_visit(node)
+
+
+class _ClassFacts:
+    def __init__(self, mod: Module, node: ast.ClassDef):
+        self.mod = mod
+        self.node = node
+        self.lock_attrs: Dict[str, bool] = {}      # attr -> reentrant?
+        self.guards: Dict[str, str] = {}           # attr -> lock name
+        self.method_guards: Dict[str, str] = {}    # lock-held helpers
+        self.scans: Dict[str, List[_MethodScan]] = {}
+
+    def collect(self) -> None:
+        for m in self.node.body:
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for stmt in ast.walk(m):
+                    if isinstance(stmt, ast.Assign) and isinstance(
+                            stmt.value, ast.Call):
+                        f = stmt.value.func
+                        if (isinstance(f, ast.Attribute)
+                                and isinstance(f.value, ast.Name)
+                                and f.value.id == "threading"
+                                and f.attr in _LOCK_FACTORIES):
+                            for tgt in stmt.targets:
+                                attr = _self_attr(tgt)
+                                if attr:
+                                    self.lock_attrs[attr] = \
+                                        _LOCK_FACTORIES[f.attr]
+        if not self.lock_attrs:
+            return
+        # guarded-by annotations on __init__ assignment lines
+        for m in self.node.body:
+            if (isinstance(m, ast.FunctionDef)
+                    and m.name == "__init__"):
+                for stmt in ast.walk(m):
+                    if isinstance(stmt, ast.Assign) \
+                            and stmt.lineno in self.mod.guard_notes:
+                        for tgt in stmt.targets:
+                            attr = _self_attr(tgt)
+                            if attr:
+                                self.guards[attr] = \
+                                    self.mod.guard_notes[stmt.lineno]
+        for m in self.node.body:
+            if isinstance(m, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for ln in (m.lineno, m.lineno - 1):
+                    guard = self.mod.guard_notes.get(ln)
+                    if guard in self.lock_attrs:
+                        self.method_guards[m.name] = guard
+                        break
+                self.scans[m.name] = self._scan_contexts(m)
+
+    def _scan_contexts(self, m) -> List[_MethodScan]:
+        """Scan a method plus its nested defs, each as a fresh context.
+
+        Only the method's own top-level context inherits its declared
+        guard: closures typically run later, on another thread."""
+        out: List[_MethodScan] = []
+        queue: List[ast.AST] = [m]
+        while queue:
+            fn = queue.pop()
+            scan = _MethodScan(set(self.lock_attrs))
+            if fn is m and m.name in self.method_guards:
+                scan.held.append(self.method_guards[m.name])
+            body = fn.body if not isinstance(fn, ast.Lambda) else [
+                ast.Expr(fn.body)]
+            for stmt in body:
+                scan.visit(stmt)
+            out.append(scan)
+            queue.extend(scan.nested)
+        return out
+
+
+class LockCheck(Check):
+    rules = ("lock-order", "guarded-by")
+
+    def scope(self, mod: Module) -> bool:
+        return any(
+            (isinstance(n, ast.Import)
+             and any(a.name == "threading" for a in n.names))
+            or (isinstance(n, ast.ImportFrom)
+                and n.module == "threading")
+            for n in ast.walk(mod.tree))
+
+    def visit(self, mod: Module) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.ClassDef):
+                facts = _ClassFacts(mod, node)
+                facts.collect()
+                if facts.lock_attrs:
+                    yield from self._check_order(facts)
+                    yield from self._check_guards(facts)
+
+    # ------------------------------------------------------------------
+    def _check_order(self, facts: _ClassFacts) -> Iterable[Finding]:
+        # transitive lock set per method (call-graph fixpoint)
+        acq: Dict[str, Set[str]] = {
+            name: set().union(*(s.acquires for s in scans))
+            for name, scans in facts.scans.items()}
+        calls: Dict[str, Set[str]] = {
+            name: {c for s in scans for _, c, _ in s.calls}
+            for name, scans in facts.scans.items()}
+        changed = True
+        while changed:
+            changed = False
+            for name in acq:
+                for callee in calls.get(name, ()):
+                    extra = acq.get(callee, set()) - acq[name]
+                    if extra:
+                        acq[name] |= extra
+                        changed = True
+        edges: Dict[Tuple[str, str], int] = {}
+        for name, scans in facts.scans.items():
+            for s in scans:
+                for outer, inner, line in s.nest_edges:
+                    edges.setdefault((outer, inner), line)
+                for held, callee, line in s.calls:
+                    for outer in held:
+                        for inner in acq.get(callee, ()):
+                            edges.setdefault((outer, inner), line)
+        cls = facts.node.name
+        # self-edge on a non-reentrant lock: certain deadlock
+        for (a, b), line in sorted(edges.items()):
+            if a == b and not facts.lock_attrs.get(a, True):
+                yield Finding(
+                    "lock-order", facts.mod.path, line, 0,
+                    f"{cls}.{a} is a non-reentrant Lock re-acquired "
+                    "while already held (self-deadlock); use RLock or "
+                    "restructure")
+        # cycle detection over distinct-lock edges
+        graph: Dict[str, Set[str]] = {}
+        for (a, b), _ in edges.items():
+            if a != b:
+                graph.setdefault(a, set()).add(b)
+        for cycle in _find_cycles(graph):
+            locs = [edges.get((cycle[i], cycle[(i + 1) % len(cycle)]))
+                    for i in range(len(cycle))]
+            line = min(loc for loc in locs if loc is not None)
+            path = " -> ".join(cycle + (cycle[0],))
+            yield Finding(
+                "lock-order", facts.mod.path, line, 0,
+                f"lock-order inversion in {cls}: acquisition cycle "
+                f"{path} can deadlock; pick one global order")
+
+    def _check_guards(self, facts: _ClassFacts) -> Iterable[Finding]:
+        cls = facts.node.name
+        # lock-held helpers must be called with their lock actually held
+        for name, scans in facts.scans.items():
+            for s in scans:
+                for held, callee, line in s.calls:
+                    guard = facts.method_guards.get(callee)
+                    if guard is not None and guard not in held:
+                        yield Finding(
+                            "guarded-by", facts.mod.path, line, 0,
+                            f"{cls}.{callee}() is declared guarded-by: "
+                            f"{guard} but {name}() calls it without "
+                            "holding it")
+        sites: Dict[str, List[Tuple[str, Tuple[str, ...], int]]] = {}
+        for name, scans in facts.scans.items():
+            if name == "__init__":
+                continue
+            for s in scans:
+                for attr, ws in s.writes.items():
+                    for held, line in ws:
+                        sites.setdefault(attr, []).append(
+                            (name, held, line))
+        for attr, ws in sorted(sites.items()):
+            guard = facts.guards.get(attr)
+            if guard is not None:
+                for name, held, line in ws:
+                    if guard not in held:
+                        yield Finding(
+                            "guarded-by", facts.mod.path, line, 0,
+                            f"{cls}.{attr} is annotated guarded-by: "
+                            f"{guard} but {name}() writes it without "
+                            "holding it")
+                continue
+            locked = [w for w in ws if w[1]]
+            unlocked = [w for w in ws if not w[1]]
+            if locked and unlocked:
+                lock_names = sorted({ln for _, held, _ in locked
+                                     for ln in held})
+                for name, _, line in unlocked:
+                    yield Finding(
+                        "guarded-by", facts.mod.path, line, 0,
+                        f"{cls}.{attr} is written under "
+                        f"{'/'.join(lock_names)} elsewhere but {name}() "
+                        "writes it with no lock held — annotate the "
+                        "attribute `# guarded-by: <lock>` and fix the "
+                        "unlocked write")
+
+
+def _find_cycles(graph: Dict[str, Set[str]]) -> List[Tuple[str, ...]]:
+    """Distinct elementary cycles (small graphs: simple DFS, dedup by
+    canonical rotation)."""
+    cycles: Set[Tuple[str, ...]] = set()
+
+    def dfs(start: str, node: str, path: List[str],
+            on_path: Set[str]) -> None:
+        for nxt in sorted(graph.get(node, ())):
+            if nxt == start:
+                cyc = tuple(path)
+                k = cyc.index(min(cyc))
+                cycles.add(cyc[k:] + cyc[:k])
+            elif nxt not in on_path and nxt > start:
+                path.append(nxt)
+                on_path.add(nxt)
+                dfs(start, nxt, path, on_path)
+                on_path.discard(nxt)
+                path.pop()
+
+    for start in sorted(graph):
+        dfs(start, start, [start], {start})
+    return sorted(cycles)

@@ -19,8 +19,6 @@ GB" message, scheduled by XLA instead of gRPC.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp

@@ -15,8 +15,7 @@ reproducibility claim is checked by comparing the two histories bit-for-bit.
 """
 from __future__ import annotations
 
-import threading
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 from repro.core.lgc import LGC
 from repro.core.lgs import LGSConnection

@@ -49,20 +49,22 @@ class SuperLink:
     """Hub: per-node task queues + completion queue. Thread-safe."""
 
     def __init__(self):
-        self._task_queues: Dict[str, Deque[Tuple[str, bytes]]] = {}
-        self._results: Dict[str, bytes] = {}
-        self._expired: Dict[str, float] = {}   # task_id -> discard time
+        self._task_queues: Dict[str, Deque[Tuple[str, bytes]]] = {}  # guarded-by: _lock
+        self._results: Dict[str, bytes] = {}                 # guarded-by: _results_cv
+        self._expired: Dict[str, float] = {}                 # guarded-by: _results_cv
         self._results_cv = threading.Condition()
-        self._nodes: Dict[str, float] = {}
+        self._nodes: Dict[str, float] = {}                   # guarded-by: _lock
         self._lock = threading.Lock()
-        self.stats = {"late_dropped": 0, "discarded_ins": 0}
+        self.stats = {"late_dropped": 0, "discarded_ins": 0}  # guarded-by: _results_cv
 
     # ------------------------------------------------------------ fleet API
     def fleet_unary(self, method: str, request: bytes) -> bytes:
         if method == "register":
             node_id = request.decode()
             with self._lock:
-                self._nodes[node_id] = time.time()
+                # monotonic: the heartbeat feeds liveness arithmetic and
+                # must not jump with the wall clock (NTP steps)
+                self._nodes[node_id] = time.monotonic()
                 self._task_queues.setdefault(node_id, deque())
             return b"OK"
         if method == "pull_task_ins":
@@ -138,9 +140,9 @@ class SuperLink:
                     kept = deque(e for e in q if e[0] not in ids)
                     undelivered.update(tid for tid, _ in q if tid in ids)
                     self._task_queues[node] = kept
-        self.stats["discarded_ins"] += len(undelivered)
         now = time.monotonic()
         with self._results_cv:
+            self.stats["discarded_ins"] += len(undelivered)
             for tid in ids:
                 if self._results.pop(tid, None) is not None:
                     continue                     # landed but unwanted: done

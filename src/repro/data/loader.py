@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import collections
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -13,7 +13,7 @@ synthetic corpora so FL experiments exhibit real convergence:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
 import numpy as np
 

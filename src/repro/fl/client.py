@@ -13,21 +13,19 @@ runtime with no code changes (the paper's core claim).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.fl.flat import FlatParams, QuantParams, quantizable
-from repro.fl.messages import (BF16_MAGIC, FLAT_MAGIC, Q8_MAGIC,
-                               QUANT_CODECS, WIRE_CODECS,
-                               EvaluateIns, EvaluateRes, FitIns, FitRes,
-                               TaskIns, TaskRes, decode_evaluate_ins,
+from repro.fl.messages import (BF16_MAGIC, FLAT_MAGIC, Q8_MAGIC, QUANT_CODECS,
+                               WIRE_CODECS, EvaluateIns, EvaluateRes, FitIns,
+                               FitRes, TaskIns, TaskRes, decode_evaluate_ins,
                                decode_fit_ins, decode_fit_res,
                                decode_task_ins, encode_evaluate_res,
                                encode_fit_res, encode_properties_res,
-                               encode_task_ins, encode_task_res,
-                               arrays_to_bytes, peek_config, peek_params)
+                               encode_task_res, arrays_to_bytes, peek_config,
+                               peek_params)
 
 NDArrays = List[np.ndarray]
 

@@ -35,6 +35,26 @@ import numpy as np
 
 NDArrays = List[np.ndarray]
 
+# ---------------------------------------------------------------------------
+# wire version-byte registry — the single source of truth for 0xF0-0xFF
+# ---------------------------------------------------------------------------
+# Legacy msgpack frames always start with a container marker, never a byte
+# in the reserved range, so one leading byte disambiguates every codec.
+# All other modules must import these names; a raw hex literal in the
+# range anywhere else is a `codec-literal` finding (repro.analysis) —
+# that is how two files would silently claim the same byte.
+WIRE_MAGIC_LO = 0xF0
+WIRE_MAGIC_HI = 0xFF
+WIRE_MAGICS: Dict[str, int] = {
+    "flat": 0xF1,          # raw little-endian fp payload (lossless)
+    "bf16": 0xF2,          # bfloat16 payload
+    "q8": 0xF3,            # int8 + per-chunk fp32 scales
+    "metric_batch": 0xFB,  # runtime/streaming.py metric event batches
+}
+#: the subset that frames *model payloads*: a decoder dispatching on
+#: these must cover all of them or raise UnsupportedCodec on the rest
+PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8")
+
 # process-unique memo-token counter (see memo_token)
 _MEMO_COUNTER = itertools.count(1)
 
@@ -158,9 +178,16 @@ class FlatParams:
     @classmethod
     def from_buffer(cls, data, layout: Layout, offset: int = 0
                     ) -> "FlatParams":
-        """Zero-copy wrap of ``data`` (bytes/memoryview/ndarray)."""
+        """Zero-copy wrap of ``data`` (bytes/memoryview/ndarray).
+
+        The view is frozen: it borrows the transport buffer, and every
+        downstream reader (tile_source tiles, delta-base chunk caches)
+        aliases it.  bytes-backed views are born read-only anyway;
+        bytearray/memoryview-backed receive buffers are not.
+        """
         buf = np.frombuffer(data, np.uint8, count=layout.total_bytes,
                             offset=offset)
+        buf.flags.writeable = False
         return cls(buf, layout)
 
     @classmethod

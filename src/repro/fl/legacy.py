@@ -18,7 +18,6 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.fl.messages import FitRes
 
 NDArrays = List[np.ndarray]
 

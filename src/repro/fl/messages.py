@@ -63,14 +63,15 @@ import numpy as np
 import jax
 
 from repro.fl.flat import (FlatParams, Layout, QCHUNK, QuantParams,
-                           layout_for, layout_of, np_dtype, quantizable,
-                           quantize_int8)
+                           WIRE_MAGIC_LO, WIRE_MAGICS, layout_for,
+                           np_dtype, quantizable, quantize_int8)
 
 NDArrays = List[np.ndarray]
 
-FLAT_MAGIC = 0xF1
-BF16_MAGIC = 0xF2
-Q8_MAGIC = 0xF3
+# wire version bytes: fl/flat.py's WIRE_MAGICS is the single registry
+FLAT_MAGIC = WIRE_MAGICS["flat"]
+BF16_MAGIC = WIRE_MAGICS["bf16"]
+Q8_MAGIC = WIRE_MAGICS["q8"]
 _HEADER_ALIGN = 64       # payload starts 64-byte aligned for fast views
 
 #: every codec this build can encode AND decode (advertised by clients in
@@ -150,7 +151,7 @@ def _is_framed(b: bytes) -> bool:
     """Flat-family frame?  Legacy msgpack messages always start with a
     container marker (fixmap/fixarray/map16/array16...), never 0xF0-0xFF,
     so the reserved range is unambiguous."""
-    return len(b) >= 5 and b[0] >= 0xF0
+    return len(b) >= 5 and b[0] >= WIRE_MAGIC_LO
 
 
 def _head_of(b: bytes) -> Tuple[Dict[str, Any], int]:
@@ -188,13 +189,23 @@ def _unframe(b: bytes, writable: bool = False
     is_delta = bool(head.get("d", 0))
     if b[0] == BF16_MAGIC:
         data = np.frombuffer(b, np_dtype("bfloat16"), count=n, offset=off)
+        data.flags.writeable = False     # borrows the transport buffer
         return head, QuantParams(layout, "bf16", data, is_delta=is_delta)
-    qchunk = int(head.get("qc", QCHUNK))
-    nchunks = -(-n // qchunk)
-    scales = np.frombuffer(b, np.float32, count=nchunks, offset=off)
-    data = np.frombuffer(b, np.int8, count=n, offset=off + 4 * nchunks)
-    return head, QuantParams(layout, "q8", data, scales, qchunk,
-                             is_delta=is_delta)
+    if b[0] == Q8_MAGIC:
+        qchunk = int(head.get("qc", QCHUNK))
+        nchunks = -(-n // qchunk)
+        scales = np.frombuffer(b, np.float32, count=nchunks, offset=off)
+        data = np.frombuffer(b, np.int8, count=n,
+                             offset=off + 4 * nchunks)
+        scales.flags.writeable = False   # borrows the transport buffer
+        data.flags.writeable = False
+        return head, QuantParams(layout, "q8", data, scales, qchunk,
+                                 is_delta=is_delta)
+    # _head_of above already rejects unknown bytes; keep the dispatch
+    # locally exhaustive so a new registry entry cannot fall through to
+    # a wrong decoder (codec-dispatch invariant, docs/INVARIANTS.md)
+    raise UnsupportedCodec(
+        f"no decoder branch for version byte 0x{b[0]:02X}")
 
 
 def _quant_frame(head: Dict[str, Any], fp: FlatParams, codec: str,

@@ -42,7 +42,7 @@ from typing import Callable, List, Sequence
 import numpy as np
 
 from repro.fl.flat import FlatParams, layout_for, unflatten_vector
-from repro.fl.messages import (FitRes, TaskIns, TaskRes, decode_fit_ins,
+from repro.fl.messages import (TaskIns, TaskRes, decode_fit_ins,
                                decode_fit_res, encode_fit_res)
 
 NDArrays = List[np.ndarray]

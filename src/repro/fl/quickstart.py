@@ -8,7 +8,7 @@ the incoming parameters, so histories can be compared bitwise.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp

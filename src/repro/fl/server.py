@@ -10,10 +10,9 @@ identical — the "no code changes" property under test in benchmarks.
 """
 from __future__ import annotations
 
-import threading
 import uuid
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 

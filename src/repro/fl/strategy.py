@@ -32,8 +32,8 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.fl import agg_kernels as kernels
-from repro.fl.flat import (QCHUNK, FlatParams, Layout, dequantize_int8,
-                           quantize_int8, unflatten_vector)
+from repro.fl.flat import (QCHUNK, FlatParams, dequantize_int8, quantize_int8,
+                           unflatten_vector)
 from repro.fl.messages import EvaluateIns, EvaluateRes, FitIns, FitRes
 
 NDArrays = List[np.ndarray]

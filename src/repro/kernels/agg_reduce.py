@@ -191,7 +191,9 @@ def _wsum_kernel(*refs, q8: bool, has_base: bool, has_acc: bool,
     else:
         init, lo = t[0].astype(jnp.float64), 1
     # n_ref (a runtime scalar) keeps the loop a genuine while loop — see
-    # the module docstring for why unrolling would break bitwise parity
+    # the module docstring for why unrolling would break bitwise parity;
+    # the det-fori-trip rule (docs/INVARIANTS.md) rejects any rewrite
+    # that makes this bound constant-foldable
     o_ref[...] = jax.lax.fori_loop(lo, n_ref[0], body, init)
 
 

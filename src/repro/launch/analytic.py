@@ -24,9 +24,7 @@ Conventions:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict
 
-import numpy as np
 
 from repro.config import (ATTN, LOCAL_ATTN, MLA, MLSTM, RGLRU, SLSTM, SWA,
                           InputShape, ModelConfig)

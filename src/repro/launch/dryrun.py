@@ -20,7 +20,7 @@ import json
 import re
 import sys
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -278,7 +278,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         rec["status"] = "skipped"
         rec["skip_reason"] = why
         return rec
-    t0 = time.time()
+    t0 = time.perf_counter()
     mesh = make_production_mesh(multi_pod=multi_pod)
     shlib.clear_fallbacks()
     rules = rules_for_shape(shape)
@@ -288,9 +288,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         with mesh:
             fn, args = build_step(arch, shape, mesh, fl_round=fl_round)
             lowered = fn.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
             hlo = compiled.as_text()

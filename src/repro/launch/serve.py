@@ -48,18 +48,18 @@ def main(argv=None) -> None:
         batch["audio_embeds"] = rng.normal(size=(
             args.batch, cfg.encoder_seq or 32, cfg.d_model)).astype(np.float32)
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     last, cache = prefill(params, batch)
-    t_prefill = time.time() - t0
+    t_prefill = time.perf_counter() - t0
     tok = jnp.argmax(last[..., : cfg.vocab_size], -1)[:, None]
     out = [tok]
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(args.new_tokens - 1):
         last, cache = decode(params, cache, tok)
         tok = jnp.argmax(last[..., : cfg.vocab_size], -1)[:, None]
         out.append(tok)
     jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    t_decode = time.perf_counter() - t0
     toks = np.concatenate(out, axis=1)
     print(f"arch={cfg.name} batch={args.batch} prompt={args.prompt_len}")
     print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "

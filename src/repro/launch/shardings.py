@@ -7,13 +7,12 @@ logical axes from their key name + rank (the cache layout is defined by
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.config import InputShape, ModelConfig
+from repro.config import InputShape
 from repro.models.api import Model
 from repro.optim.optimizers import AdamState
 from repro.sharding import DEFAULT_RULES, spec_for

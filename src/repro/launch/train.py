@@ -16,13 +16,10 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.config import TrainConfig, get_model_config
 from repro.data.loader import FederatedDataLoader
-from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
 from repro.train.steps import make_train_state, make_train_step
 
@@ -65,14 +62,14 @@ def main(argv=None) -> None:
     step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0,))
     loader = FederatedDataLoader(cfg.vocab_size, args.seq, num_sites=1,
                                  batch_per_site=args.batch, seed=args.seed)
-    t0 = time.time()
+    t0 = time.perf_counter()
     tokens_done = 0
     for step in range(start, args.steps):
         batch = loader.next_batch(0)
         state, metrics = step_fn(state, batch)
         tokens_done += args.batch * args.seq
         if (step + 1) % args.log_every == 0:
-            dt = time.time() - t0
+            dt = time.perf_counter() - t0
             print(f"step {step+1:5d}  loss {float(metrics['loss']):.4f}  "
                   f"gnorm {float(metrics['grad_norm']):.3f}  "
                   f"tok/s {tokens_done/dt:,.0f}", flush=True)

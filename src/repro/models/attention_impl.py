@@ -7,7 +7,6 @@ Both satisfy the same contract and are cross-checked in tests.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ projected encoder K/V, so a serve step touches the encoder zero times.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ are namespaced ``job/<job_id>/...`` on the shared transport.
 """
 from __future__ import annotations
 
-import itertools
 import threading
 import uuid
 from dataclasses import dataclass, field

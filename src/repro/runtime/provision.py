@@ -11,8 +11,8 @@ from __future__ import annotations
 import hashlib
 import hmac
 import os
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 
 @dataclass(frozen=True)

@@ -80,7 +80,7 @@ class ReliableMessenger:
         with self._lock:
             self._handlers[topic] = fn
 
-    def _reap_results(self) -> None:
+    def _reap_results(self) -> None:  # guarded-by: _lock
         """Drop cached result payloads past result_ttl; keep the (tiny)
         dedup marks 10x longer.  Caller holds the lock.  A duplicate REQ
         arriving after the payload is reaped but within the mark's

@@ -14,7 +14,7 @@ from __future__ import annotations
 import threading
 import time
 import traceback
-from typing import Any, Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.runtime.ccp import CCP, JobContext
 from repro.runtime.jobs import JobRecord, JobSpec, JobStatus, ResourcePool

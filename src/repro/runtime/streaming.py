@@ -14,12 +14,15 @@ import time
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
+from repro.fl.flat import WIRE_MAGICS
 from repro.runtime.reliable import ReliableMessenger
 from repro.runtime.transport import Message
 
 _FMT = "!d i"   # value, step
-_BATCH_MAGIC = 0xFB   # legacy frames start with the high byte of a u16 tag
-                      # length (< 0xFB for any sane tag), so this is unambiguous
+# legacy frames start with the high byte of a u16 tag length (below the
+# reserved 0xF0 range for any sane tag), so the version byte — claimed
+# in fl/flat.py's WIRE_MAGICS registry — is unambiguous
+_BATCH_MAGIC = WIRE_MAGICS["metric_batch"]
 
 
 def _encode(tag: str, value: float, step: int) -> bytes:
@@ -91,7 +94,9 @@ class MetricCollector:
             items = _decode_batch(msg.payload)
         else:
             items = [_decode(msg.payload)]
-        now = time.time()
+        # TensorBoard-style wall_time: reported to humans, never compared
+        # against deadlines (those are time.monotonic(), see INVARIANTS)
+        now = time.time()  # repro: allow[monotonic-clock] reason=human-facing wall_time in the exported TensorBoard JSON
         with self._lock:
             for tag, value, step in items:
                 self._series[tag].append((step, value, now))

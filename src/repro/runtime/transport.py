@@ -15,9 +15,8 @@ from __future__ import annotations
 import hashlib
 import queue
 import threading
-import time
-from dataclasses import dataclass, field, replace
-from typing import Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclass(frozen=True)

@@ -11,7 +11,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import ModelConfig, TrainConfig
+from repro.config import TrainConfig
 from repro.models.api import Model
 from repro.optim import make_optimizer
 from repro.optim.optimizers import clip_by_global_norm

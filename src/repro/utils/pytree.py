@@ -1,7 +1,7 @@
 """Pytree helpers used across the FL stack and the training substrate."""
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, List, Tuple
 
 import jax
 import jax.numpy as jnp

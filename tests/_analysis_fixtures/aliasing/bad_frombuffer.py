@@ -1,0 +1,11 @@
+"""Seeded: frombuffer views handed out without freezing."""
+import numpy as np
+
+
+def decode(buf):
+    arr = np.frombuffer(buf, dtype=np.float32)      # alias-writeable (never frozen)
+    return arr
+
+
+def peek(buf):
+    return np.frombuffer(buf, dtype=np.uint8)       # alias-writeable (unbound)

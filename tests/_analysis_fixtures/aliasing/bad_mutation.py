@@ -1,0 +1,17 @@
+"""Seeded: in-place writes into borrow-only views."""
+import numpy as np
+
+
+def clobber_tile(src, i):
+    view = src.tile_source(i)
+    view[0] = 0.0                       # alias-mutation (subscript store)
+    view.fill(1.0)                      # alias-mutation (.fill in-place)
+    return view
+
+
+def clobber_wire(raw):
+    buf = np.frombuffer(raw, dtype=np.float64)
+    buf.flags.writeable = False
+    buf += 1.0                          # alias-mutation (augmented assignment)
+    np.copyto(buf, buf * 2)             # alias-mutation (copyto destination)
+    return buf

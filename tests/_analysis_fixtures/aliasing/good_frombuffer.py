@@ -1,0 +1,12 @@
+"""Clean twin: every frombuffer view is frozen or copied immediately."""
+import numpy as np
+
+
+def decode(buf):
+    arr = np.frombuffer(buf, dtype=np.float32)
+    arr.flags.writeable = False
+    return arr
+
+
+def materialize(buf):
+    return np.frombuffer(buf, dtype=np.uint8).copy()

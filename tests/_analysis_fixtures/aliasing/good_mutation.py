@@ -1,0 +1,18 @@
+"""Clean twin: copies are materialized before any write."""
+import numpy as np
+
+
+def shift_tile(src, i):
+    view = src.tile_source(i)
+    out = view.copy()
+    out[0] = 0.0
+    out += 1.0
+    return out
+
+
+def shift_wire(raw):
+    buf = np.frombuffer(raw, dtype=np.float64)
+    buf.flags.writeable = False
+    result = buf.copy()
+    result *= 2.0
+    return result

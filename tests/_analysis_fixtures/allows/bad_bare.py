@@ -1,0 +1,12 @@
+"""Seeded: suppression pragmas that are themselves findings."""
+import numpy as np
+
+
+def decode(buf):
+    arr = np.frombuffer(buf, dtype=np.float32)  # repro: allow[alias-writeable]
+    return arr                                  # ^ bare-allow (no reason=)
+
+
+def frame(payload):
+    x = 1  # repro: allow[not-a-rule] reason=typo'd rule id -> unknown-rule
+    return payload + bytes([x])

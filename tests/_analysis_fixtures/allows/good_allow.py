@@ -1,0 +1,8 @@
+"""Clean twin: a reasoned allow fully suppresses the finding."""
+import numpy as np
+
+
+def decode(buf):
+    # repro: allow[alias-writeable] reason=caller owns buf exclusively in this fixture
+    arr = np.frombuffer(buf, dtype=np.float32)
+    return arr

@@ -1,0 +1,15 @@
+"""Seeded: wall clock used for deadline/TTL arithmetic."""
+import time
+
+
+def wait_for(predicate, timeout_s: float) -> bool:
+    deadline = time.time() + timeout_s          # monotonic-clock
+    while time.time() < deadline:               # monotonic-clock
+        if predicate():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def stamp_ns() -> int:
+    return time.time_ns()                       # monotonic-clock

@@ -1,0 +1,18 @@
+"""Clean twin: monotonic deadlines; wall clock only for a human-facing
+timestamp, under a reasoned allow."""
+import time
+
+
+def wait_for(predicate, timeout_s: float) -> bool:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def report() -> dict:
+    # timestamp shown to humans in an exported log, never compared
+    wall = time.time()  # repro: allow[monotonic-clock] reason=human-facing log timestamp
+    return {"wall_time": wall, "elapsed": time.perf_counter()}

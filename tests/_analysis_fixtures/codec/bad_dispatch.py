@@ -1,0 +1,14 @@
+"""Seeded: a payload-magic dispatch that silently drops q8 frames."""
+from tests._analysis_fixtures.codec.fl.flat import WIRE_MAGICS
+
+FLAT_MAGIC = WIRE_MAGICS["flat"]
+BF16_MAGIC = WIRE_MAGICS["bf16"]
+
+
+def decode(b: bytes):                   # codec-dispatch (q8 uncovered, no raise)
+    v = b[0]
+    if v == FLAT_MAGIC:
+        return ("flat", b[1:])
+    if v == BF16_MAGIC:
+        return ("bf16", b[1:])
+    return None

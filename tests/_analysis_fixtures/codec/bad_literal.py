@@ -1,0 +1,5 @@
+"""Seeded: a hex version byte claimed outside the registry."""
+
+
+def frame(payload: bytes) -> bytes:
+    return bytes([0xF7]) + payload      # codec-literal (raw version byte)

@@ -1,0 +1,14 @@
+"""Fixture registry: a miniature fl/flat.py whose WIRE_MAGICS table is
+the single allowed home for 0xF0-0xFF hex literals.  The codec fixtures
+pass this file alongside their own so CodecCheck sees a registry."""
+from typing import Dict
+
+WIRE_MAGIC_LO = 0xF0
+WIRE_MAGIC_HI = 0xFF
+WIRE_MAGICS: Dict[str, int] = {
+    "flat": 0xF1,
+    "bf16": 0xF2,
+    "q8": 0xF3,
+    "metric_batch": 0xFB,
+}
+PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8")

@@ -1,0 +1,19 @@
+"""Clean twin: the uncovered tail raises UnsupportedCodec."""
+from tests._analysis_fixtures.codec.fl.flat import WIRE_MAGICS
+
+
+class UnsupportedCodec(ValueError):
+    pass
+
+
+FLAT_MAGIC = WIRE_MAGICS["flat"]
+BF16_MAGIC = WIRE_MAGICS["bf16"]
+
+
+def decode(b: bytes):
+    v = b[0]
+    if v == FLAT_MAGIC:
+        return ("flat", b[1:])
+    if v == BF16_MAGIC:
+        return ("bf16", b[1:])
+    raise UnsupportedCodec(f"no decoder branch for version byte {v:#04x}")

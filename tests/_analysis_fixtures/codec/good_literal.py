@@ -1,0 +1,8 @@
+"""Clean twin: version bytes flow through named registry aliases."""
+from tests._analysis_fixtures.codec.fl.flat import WIRE_MAGICS
+
+FLAT_MAGIC = WIRE_MAGICS["flat"]
+
+
+def frame(payload: bytes) -> bytes:
+    return bytes([FLAT_MAGIC]) + payload

@@ -1,0 +1,8 @@
+"""Seeded: imports bound and never read."""
+import json                             # dead-name
+import os
+from typing import Dict, List           # dead-name (List)
+
+
+def manifest(root: str) -> Dict[str, str]:
+    return {name: os.path.join(root, name) for name in os.listdir(root)}

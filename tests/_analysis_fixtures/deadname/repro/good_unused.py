@@ -1,0 +1,9 @@
+"""Clean twin: every import is read (or noqa'd re-export)."""
+import os
+from typing import Dict
+
+from tests.conftest import seed_rng  # noqa: F401 -- re-export for plugins
+
+
+def manifest(root: str) -> Dict[str, str]:
+    return {name: os.path.join(root, name) for name in os.listdir(root)}

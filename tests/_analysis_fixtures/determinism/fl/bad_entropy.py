@@ -1,0 +1,16 @@
+"""Seeded ambient entropy in a fold path."""
+import random
+import time
+
+import numpy as np
+
+
+def fold(xs):
+    jitter = random.random()            # det-entropy
+    noise = np.random.normal(0, 1)      # det-entropy (legacy global)
+    stamp = time.monotonic()            # det-entropy (clock in fold)
+    return sum_like(xs) + jitter + noise + stamp
+
+
+def sum_like(xs):
+    return xs

@@ -1,0 +1,10 @@
+"""Seeded set iteration in an aggregation module: hash order leaks."""
+
+
+def fold(results):
+    total = 0.0
+    for node_id in {r.node for r in results}:       # det-set-iter
+        total += results[node_id]
+    for x in set(results):                          # det-set-iter
+        total += x
+    return total

@@ -1,0 +1,10 @@
+"""Clean twin: node ids are sorted before the fold touches them."""
+
+
+def fold(results):
+    total = 0.0
+    for node_id in sorted({r.node for r in results}):
+        total += results[node_id]
+    for x in sorted(set(results)):
+        total += x
+    return total

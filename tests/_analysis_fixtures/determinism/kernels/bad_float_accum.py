@@ -1,0 +1,6 @@
+"""Seeded Python-float accumulation inside a traced function."""
+import jax.numpy as jnp
+
+
+def traced_loss(parts):
+    return sum(jnp.sum(p) for p in parts)           # det-float-accum

@@ -1,0 +1,12 @@
+"""Seeded constant-foldable fori_loop trip counts: XLA unrolls these and
+LLVM's reassociation re-enables FMA contraction in the fold."""
+import jax
+
+
+def kernel(o_ref, x_ref):
+    def body(i, acc):
+        return acc + x_ref[i]
+
+    o_ref[...] = jax.lax.fori_loop(0, 16, body, 0.0)        # det-fori-trip
+    o_ref[...] += jax.lax.fori_loop(0, x_ref.shape[0] - 1,  # det-fori-trip
+                                    body, 0.0)

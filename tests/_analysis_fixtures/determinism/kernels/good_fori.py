@@ -1,0 +1,10 @@
+"""Clean twin: the trip count flows through a runtime ref, so the loop
+cannot be unrolled at trace time (kernels/agg_reduce.py idiom)."""
+import jax
+
+
+def kernel(o_ref, x_ref, n_ref):
+    def body(i, acc):
+        return acc + x_ref[i]
+
+    o_ref[...] = jax.lax.fori_loop(0, n_ref[0], body, 0.0)

@@ -1,0 +1,18 @@
+"""Seeded guarded-by annotation violation: `_cache` declares its guard
+but flush() writes it holding the wrong lock."""
+import threading
+
+
+class Store:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._io_lock = threading.Lock()
+        self._cache = {}  # guarded-by: _lock
+
+    def put(self, k, v):
+        with self._lock:
+            self._cache[k] = v
+
+    def flush(self):
+        with self._io_lock:
+            self._cache.clear()

@@ -1,0 +1,15 @@
+"""Seeded lock-held-helper misuse: `_reap` declares guarded-by but
+tick() calls it without holding the lock."""
+import threading
+
+
+class Cache:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = {}  # guarded-by: _lock
+
+    def _reap(self):  # guarded-by: _lock
+        self._items.clear()
+
+    def tick(self):
+        self._reap()

@@ -1,0 +1,16 @@
+"""Seeded mixed-discipline write: `stats` is locked in record() but
+written bare in reset() — the unlocked write is the race."""
+import threading
+
+
+class Tracker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stats = {"seen": 0}
+
+    def record(self):
+        with self._lock:
+            self.stats["seen"] += 1
+
+    def reset(self):
+        self.stats = {"seen": 0}

@@ -1,0 +1,20 @@
+"""Seeded lock-order inversion: _a -> _b in push, _b -> _a in drain."""
+import threading
+
+
+class Queue:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self.items = []
+
+    def push(self, x):
+        with self._a:
+            with self._b:
+                self.items.append(x)
+
+    def drain(self):
+        with self._b:
+            with self._a:
+                out, self.items = self.items, []
+        return out

@@ -1,0 +1,18 @@
+"""Seeded self-deadlock: a non-reentrant Lock re-acquired through a
+helper called while it is already held."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0
+
+    def _bump(self):
+        with self._lock:
+            self.n += 1
+
+    def bump_twice(self):
+        with self._lock:
+            self._bump()        # re-acquires the non-reentrant lock
+            self.n += 1

@@ -1,0 +1,25 @@
+"""Clean twin: annotated attributes only written under their guard,
+lock-held helper only called with the lock held."""
+import threading
+
+
+class Tracker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.stats = {"seen": 0}  # guarded-by: _lock
+        self._items = {}          # guarded-by: _lock
+
+    def record(self):
+        with self._lock:
+            self.stats["seen"] += 1
+
+    def reset(self):
+        with self._lock:
+            self.stats = {"seen": 0}
+
+    def _reap(self):  # guarded-by: _lock
+        self._items.clear()
+
+    def tick(self):
+        with self._lock:
+            self._reap()

@@ -1,0 +1,30 @@
+"""Clean twin: one global acquisition order (_a before _b), and the
+reentrant helper pattern uses an RLock."""
+import threading
+
+
+class Queue:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+        self._r = threading.RLock()
+        self.items = []
+
+    def push(self, x):
+        with self._a:
+            with self._b:
+                self.items.append(x)
+
+    def drain(self):
+        with self._a:
+            with self._b:
+                out, self.items = self.items, []
+        return out
+
+    def _bump(self):
+        with self._r:
+            self.items.append(None)
+
+    def bump_twice(self):
+        with self._r:
+            self._bump()        # fine: RLock is reentrant

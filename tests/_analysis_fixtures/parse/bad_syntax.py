@@ -1,0 +1,5 @@
+"""Seeded: unparseable module -> parse-error (meta, unsuppressible)."""
+
+
+def broken(:
+    return

@@ -21,7 +21,7 @@ import ml_dtypes
 from repro.fl import agg_kernels as kernels
 from repro.fl.flat import FlatParams, layout_of, unflatten_vector
 from repro.fl.legacy import LEGACY_TABLE
-from repro.fl.messages import (FitIns, FitRes, arrays_to_bytes,
+from repro.fl.messages import (FLAT_MAGIC, FitIns, FitRes, arrays_to_bytes,
                                bytes_to_arrays, decode_fit_ins,
                                decode_fit_res, encode_fit_ins,
                                encode_fit_res, set_default_codec)
@@ -142,13 +142,13 @@ def test_default_codec_switch():
     prev = set_default_codec("legacy")
     try:
         b = encode_fit_res(FitRes(arrays, 1, {}))
-        assert b[0] != 0xF1                      # msgpack fixmap marker
+        assert b[0] != FLAT_MAGIC                # msgpack fixmap marker
         assert decode_fit_res(b).parameters[0].tobytes() == \
             arrays[0].tobytes()
     finally:
         set_default_codec(prev)
     b = encode_fit_res(FitRes(arrays, 1, {}))
-    assert b[0] == 0xF1
+    assert b[0] == FLAT_MAGIC
 
 
 def test_flat_codec_empty_parameters():
