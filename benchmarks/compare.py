@@ -26,7 +26,15 @@ when the trajectory regresses:
   the absolute 1.3x floor the sharded deferred-base fold promises over
   the legacy per-arrival fold, and the ``match`` / ``shard_mem_ok``
   invariant flags (bitwise shard-count invariance, per-shard accumulator
-  <= (1/shards + 10%) of the single-host footprint).
+  <= (1/shards + 10%) of the single-host footprint);
+- ``hier_agg_*`` rows: presence plus the ``root_payloads_ok`` (the root
+  folded <= #edges payloads for the 10k-client round) and ``match``
+  (bitwise vs the flat low-memory fold) invariant flags — wall-clock is
+  not gated, the O(#edges) claim is;
+- ``async_ttl_*`` rows: presence plus ``async_reached`` / ``ttl_ok``
+  (FedBuff reaches the sync run's quickstart loss within the sync
+  wall-clock) and ``staleness_ok`` (no fold ever exceeds the staleness
+  bound).
 
 Timing rows that legitimately vary run to run (round wall-clock, straggler
 ratios) are NOT gated — only throughput/speedup of the aggregation engine
@@ -51,12 +59,15 @@ from typing import Dict, List
 #: but losing them would silently drop the 3.5x-reduction and
 #: convergence checks below)
 GATED_PREFIXES = ("agg_throughput_", "quantized_agg_", "pallas_agg_",
-                  "wire_bytes_", "wire_codec_convergence", "shard_agg_")
+                  "wire_bytes_", "wire_codec_convergence", "shard_agg_",
+                  "hier_agg_", "async_ttl_")
 #: higher-is-better derived fields compared under the threshold
 GATED_FIELDS = ("mbps", "speedup_vs_legacy", "overlap_speedup")
 #: boolean derived fields that must hold wherever they appear
 INVARIANT_FLAGS = ("match", "match_tol", "bitwise_match", "within_tol",
-                   "q8_match", "shard_mem_ok")
+                   "q8_match", "shard_mem_ok", "root_payloads_ok",
+                   "delivered_ok", "async_reached", "staleness_ok",
+                   "ttl_ok")
 #: wire_bytes_* rows must keep at least this payload reduction vs fp32
 MIN_WIRE_REDUCTION = 3.5
 #: shard_agg_* rows must keep at least this speedup over the legacy

@@ -16,6 +16,17 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          with one straggler (~max client time) or one dead
                          node (~shared deadline, NOT n x timeout; the node
                          lands in failures, the round completes)
+  hier_agg_10k_*         two-tier edge aggregation at 10k simulated
+                         clients: the root folds O(#edges) 0xF4 partial
+                         payloads (derived = root_payloads_ok + bitwise
+                         match vs the flat low-memory fold), plus the
+                         SuperLink waiter-indexing completion-queue
+                         micro-bench (tasks_per_s at 10k in-flight ids)
+  async_ttl_*            FedBuff async mode vs sync rounds with one
+                         straggler: async reaches the sync run's final
+                         quickstart loss in <= the sync wall-clock
+                         (ttl_ok) and never folds an update staler than
+                         the bound (staleness_ok)
   wire_bytes_*           quantized wire format (0xF3 int8 + per-chunk
                          scales) vs raw fp32: per-round payload bytes both
                          directions (derived = reduction + bounded-error
@@ -695,6 +706,162 @@ def bench_straggler_overlap(quick=False):
               f"legacy_behavior=abort;failures={nfail}")
 
 
+def bench_hier_agg(quick=False):
+    """Two-tier topology at 10k simulated clients (ISSUE 8 tentpole):
+    the root server folds exactly ``num_edges`` 0xF4 partial-aggregate
+    payloads per round instead of 10k leaf results, and — because every
+    client update is dyadic-exact (integers/256, weight 1) — the
+    aggregate is bitwise-equal to the flat low-memory fold over all 10k
+    updates.  Also rows the SuperLink O(1) waiter indexing: completion-
+    queue throughput with 10k in-flight task ids (the old pull_any
+    rescanned every pending id per wakeup: O(n) per result, O(n^2) per
+    round)."""
+    import msgpack
+
+    from repro.core.interop import run_hierarchical
+    from repro.core.superlink import SuperLink
+    from repro.fl import ClientApp, FedAvg, NumPyClient, ServerApp, \
+        ServerConfig
+    from repro.fl import agg_kernels as K
+    from repro.fl.messages import FitRes
+    from repro.fl.strategy import _flat_of
+
+    n_clients, num_edges = 10_000, 8
+    shapes = [(64, 16), (16,)]
+    zeros = [np.zeros(s, np.float32) for s in shapes]
+
+    def update(idx):
+        rng = np.random.default_rng(idx)
+        return [rng.integers(-512, 512, s).astype(np.float32) / 256.0
+                for s in shapes]
+
+    class Toy(NumPyClient):
+        def __init__(self, site):
+            self.idx = int(site.rsplit("-", 1)[1])
+
+        def fit(self, parameters, config):
+            return [p + u for p, u in zip(parameters, update(self.idx))], \
+                1, {}
+
+        def evaluate(self, parameters, config):
+            return 0.0, 1, {}
+
+    sites = [f"c-{i:05d}" for i in range(n_clients)]
+    app = ServerApp(ServerConfig(num_rounds=1, round_timeout=300.0),
+                    FedAvg(initial_parameters=zeros))
+    t0 = time.perf_counter()
+    h = run_hierarchical(
+        app, lambda s: ClientApp(client_fn=lambda cid, s=s:
+                                 Toy(s).to_client()),
+        sites, num_edges=num_edges, edge_timeout=300.0)
+    dt = time.perf_counter() - t0
+    r = h.rounds[0]
+    payloads = r.metrics["num_payloads"]
+    ok = (payloads <= num_edges and r.metrics["num_clients"] == n_clients
+          and not r.failures)
+    # flat low-memory reference: ONE streaming fold over all 10k updates
+    # (same arithmetic the flat server runs), no transport
+    acc = K.StreamingWeightedSum(_flat_of(FitRes(zeros, 1, {})).layout)
+    for i in range(n_clients):
+        acc.add(_flat_of(FitRes(update(i), 1, {})), 1.0)
+    want = acc.finalize().to_arrays()
+    match = all(np.array_equal(a, b)
+                for a, b in zip(h.final_parameters, want))
+    print(f"hier_agg_10k_{num_edges}edges,{dt * 1e6:.0f},"
+          f"clients={n_clients};edges={num_edges};"
+          f"root_payloads={payloads};root_payloads_ok={ok};match={match}")
+
+    # waiter-indexing micro-bench: one cursor over 10k in-flight ids,
+    # every arrival routed O(1) (legacy pull_any: O(n) rescan per result)
+    n_tasks = 2_000 if quick else 10_000
+    link = SuperLink()
+    tids = [link.push_task_ins("n0", b"") for _ in range(n_tasks)]
+    w = link.register_waiter(tids)
+    t0 = time.perf_counter()
+    for tid in tids:
+        link.fleet_unary("push_task_res",
+                         msgpack.packb({"id": tid, "res": b"r"},
+                                       use_bin_type=True))
+    got = 0
+    deadline = time.monotonic() + 60.0
+    while got < n_tasks and link.waiter_next(w, deadline) is not None:
+        got += 1
+    dt = time.perf_counter() - t0
+    link.release_waiter(w, tids)
+    link.discard(tids)
+    print(f"hier_agg_10k_pull,{dt / n_tasks * 1e6:.3f},"
+          f"tasks_per_s={n_tasks / dt:.0f};n={n_tasks};"
+          f"delivered_ok={got == n_tasks}")
+
+
+def bench_async_ttl(quick=False):
+    """FedBuff async mode vs sync rounds on the quickstart task with one
+    straggler (ISSUE 8 acceptance): the async run must reach the sync
+    run's final loss within the sync wall-clock (``ttl_ok``) while never
+    folding an update staler than the bound (``staleness_ok``) — the
+    straggler tax the buffered fold removes."""
+    from repro.core.superlink import (NativeConnection, SuperLink,
+                                      SuperLinkDriver, SuperNode)
+    from repro.fl import ClientApp, FedAvg, ServerApp, ServerConfig
+    from repro.fl.quickstart import QuickstartClient
+
+    delay = 0.4
+    sync_rounds = 2 if quick else 3
+    async_rounds = 4 if quick else 6          # version advances
+    sites = ["site-1", "site-2", "site-3", "site-4"]
+
+    class Straggler(QuickstartClient):
+        def fit(self, parameters, config):
+            time.sleep(delay)
+            return super().fit(parameters, config)
+
+    def run(config):
+        link = SuperLink()
+        nodes = []
+        for i, s in enumerate(sites):
+            cls = Straggler if i == len(sites) - 1 else QuickstartClient
+            nodes.append(SuperNode(
+                s, ClientApp(client_fn=lambda cid, c=cls, s=s:
+                             c(s).to_client()),
+                NativeConnection(link)))
+        for n in nodes:
+            n.start()
+        try:
+            t0 = time.perf_counter()
+            h = ServerApp(config, FedAvg()).run(
+                SuperLinkDriver(link, expected_nodes=len(sites)))
+            return time.perf_counter() - t0, h
+        finally:
+            for n in nodes:
+                n.stop()
+
+    t_sync, h_sync = run(ServerConfig(num_rounds=sync_rounds,
+                                      round_timeout=120.0))
+    loss_sync = h_sync.losses()[-1][1]
+    target = loss_sync + 0.05                 # wire_codec_convergence tol
+
+    max_staleness = 4
+    # evaluate the final version only: an evaluate task queues behind the
+    # straggler's in-flight delayed fit on its single-threaded SuperNode,
+    # so mid-run evaluates would re-impose the very straggler tax the
+    # buffered fold removes
+    t_async, h_async = run(ServerConfig(
+        num_rounds=async_rounds, round_timeout=120.0, async_mode=True,
+        async_buffer_k=2, async_max_staleness=max_staleness,
+        async_eval_every=async_rounds))
+    async_losses = [l for _, l in h_async.losses()]
+    reached = bool(async_losses and min(async_losses) <= target)
+    staleness_ok = all(r.metrics.get("max_folded_staleness", 0)
+                       <= max_staleness for r in h_async.rounds)
+    ttl_ok = bool(reached and t_async <= t_sync)
+    folds = h_async.rounds[-1].metrics.get("async_folded", 0)
+    print(f"async_ttl_quickstart,{t_async * 1e6:.0f},"
+          f"sync_s={t_sync:.2f};async_s={t_async:.2f};"
+          f"loss_sync={loss_sync:.4f};loss_async={min(async_losses):.4f};"
+          f"folds={folds};async_reached={reached};"
+          f"staleness_ok={staleness_ok};ttl_ok={ttl_ok}")
+
+
 class _Tee:
     """stdout wrapper that records everything written, so the CSV rows can
     be re-emitted as a structured ``BENCH_*.json`` snapshot."""
@@ -778,6 +945,8 @@ def main() -> None:
         bench_wire_codecs(args.quick)
         bench_wire_convergence(args.quick)
         bench_straggler_overlap(args.quick)
+        bench_hier_agg(args.quick)
+        bench_async_ttl(args.quick)
     finally:
         sys.stdout = tee.inner
     if args.json:

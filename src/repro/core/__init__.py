@@ -2,8 +2,11 @@
 FLARE runtime by routing the Flower transport through FLARE (Fig. 4)."""
 from repro.core.superlink import (  # noqa: F401
     SuperLink, SuperLinkDriver, SuperNode, NativeConnection,
+    TaskStream, EdgeAggregatorApp, InlineFleetDriver, make_edge_tier,
 )
 from repro.core.lgs import LGSConnection  # noqa: F401
 from repro.core.lgc import LGC  # noqa: F401
-from repro.core.interop import run_native, run_in_flare  # noqa: F401
+from repro.core.interop import (  # noqa: F401
+    run_native, run_in_flare, run_hierarchical,
+)
 from repro.core.collective import tight_fedavg, make_fl_round_step  # noqa: F401

@@ -20,7 +20,8 @@ from typing import Callable, Optional, Sequence
 from repro.core.lgc import LGC
 from repro.core.lgs import LGSConnection
 from repro.core.superlink import (NativeConnection, SuperLink,
-                                  SuperLinkDriver, SuperNode)
+                                  SuperLinkDriver, SuperNode,
+                                  make_edge_tier)
 from repro.fl.client import ClientApp
 from repro.fl.server import History, ServerApp
 from repro.runtime.ccp import JobContext
@@ -44,6 +45,27 @@ def run_native(server_app: ServerApp,
         return server_app.run(driver)
     finally:
         for n in nodes:
+            n.stop()
+
+
+def run_hierarchical(server_app: ServerApp,
+                     client_app_fn: Callable[[str], ClientApp],
+                     sites: Sequence[str], num_edges: int,
+                     edge_timeout: float = 60.0) -> History:
+    """Two-tier native run: ``sites`` clients partitioned across
+    ``num_edges`` edge aggregators (inline child fleets, no per-client
+    threads), so the root server folds **O(num_edges)** payloads per
+    round instead of O(len(sites)).  With a weighted-sum strategy the
+    sync result continues the flat fold's arithmetic exactly — see
+    :class:`~repro.core.superlink.EdgeAggregatorApp`."""
+    link = SuperLink()
+    apps = {s: client_app_fn(s) for s in sites}
+    edges = make_edge_tier(link, apps, num_edges, timeout=edge_timeout)
+    try:
+        driver = SuperLinkDriver(link, expected_nodes=num_edges)
+        return server_app.run(driver)
+    finally:
+        for n in edges:
             n.stop()
 
 

@@ -2,14 +2,16 @@ from repro.fl.messages import (  # noqa: F401
     FitIns, FitRes, EvaluateIns, EvaluateRes, TaskIns, TaskRes,
     UnsupportedCodec, WIRE_CODECS, QUANT_CODECS,
     arrays_to_bytes, bytes_to_arrays, params_to_arrays, arrays_to_params,
-    set_default_codec,
+    encode_partial_fit_res, set_default_codec,
 )
 from repro.fl.flat import (  # noqa: F401
-    FlatParams, Layout, QuantParams, layout_for, layout_of,
+    FlatParams, Layout, PartialSum, QuantParams, layout_for, layout_of,
     quantize_int8, unflatten_vector,
 )
 from repro.fl.client import Client, ClientApp, NumPyClient  # noqa: F401
 from repro.fl.server import ServerApp, ServerConfig, Driver  # noqa: F401
+from repro.fl.registry import PopulationRegistry  # noqa: F401
+from repro.fl.fedbuff import FedBuffBuffer  # noqa: F401
 from repro.fl.strategy import (  # noqa: F401
     Strategy, FitAccumulator, QuorumNotMet, FedAvg, FedAdam, FedYogi,
     FedAvgM, FedProx, FedMedian, FedTrimmedMean, Krum, make_strategy,

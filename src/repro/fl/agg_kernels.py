@@ -481,6 +481,55 @@ class StreamingWeightedSum:
         self.total_w += float(w)
         self.count += 1
 
+    def add_partial(self, ps, scale: float = 1.0) -> None:
+        """Fold a pre-reduced subtree sum (:class:`~repro.fl.flat
+        .PartialSum`): ``acc += scale * S_e`` — no per-client weight
+        multiply, the edge already applied them.  The edge computed
+        ``S_e`` with this class's own chunk arithmetic, so root-folding
+        partials continues the flat fold's accumulation exactly (bitwise
+        for a single edge on any data; regrouped-sum ULP otherwise).
+        ``scale`` (async staleness discount) also multiplies the
+        contributed weight: ``total_w += scale * W_e``."""
+        sw = np.float64(scale)
+        if self.shards:
+            if self._pipe is not None:
+                # ride the decode pipeline so the (arrival, shard) fold
+                # order stays the serial order
+                self._pipe.submit(ps.decode_chunk, sw, self._fold_item)
+            else:
+                for si, (lo, hi) in enumerate(self._bounds):
+                    if hi <= lo:
+                        continue
+                    acc = self._shard_acc(si)
+                    for a in range(lo, hi, CHUNK):
+                        b = min(a + CHUNK, hi)
+                        x = ps.decode_chunk(a, b, self._tmp)
+                        np.multiply(x, sw, out=self._scratch[:b - a])
+                        acc[a - lo:b - lo] += self._scratch[:b - a]
+        else:
+            acc = self._acc_vec()
+            n = self.layout.total_size
+            for lo in range(0, n, CHUNK):
+                hi = min(lo + CHUNK, n)
+                x = ps.f64_chunk(lo, hi, self._tmp)
+                np.multiply(x, sw, out=self._scratch[:hi - lo])
+                acc[lo:hi] += self._scratch[:hi - lo]
+        self.total_w += float(scale) * float(ps.total_w)
+        self.count += int(ps.count)
+
+    def raw_sum(self) -> np.ndarray:
+        """The unscaled fp64 accumulator ``sum_i w_i x_i`` — what an edge
+        aggregator frames as a 0xF4 partial payload instead of calling
+        :meth:`finalize`.  Ends the fold: the returned vector IS the
+        accumulator (no copy), so neither :meth:`add` nor
+        :meth:`finalize` may be called afterwards.  Single-host mode
+        only (edges pre-reduce locally; sharding is root-side state)."""
+        if self.shards:
+            raise ValueError(
+                "raw_sum() is single-host only: edge pre-reduction keeps "
+                "one local accumulator, sharded state is for the root")
+        return self._acc_vec()
+
     def finalize(self) -> FlatParams:
         if self.shards:
             return self._finalize_sharded()

@@ -49,11 +49,12 @@ WIRE_MAGICS: Dict[str, int] = {
     "flat": 0xF1,          # raw little-endian fp payload (lossless)
     "bf16": 0xF2,          # bfloat16 payload
     "q8": 0xF3,            # int8 + per-chunk fp32 scales
+    "partial": 0xF4,       # edge-aggregator partial sum (fp64 Σw·x + W)
     "metric_batch": 0xFB,  # runtime/streaming.py metric event batches
 }
 #: the subset that frames *model payloads*: a decoder dispatching on
 #: these must cover all of them or raise UnsupportedCodec on the rest
-PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8")
+PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8", "partial")
 
 # process-unique memo-token counter (see memo_token)
 _MEMO_COUNTER = itertools.count(1)
@@ -540,3 +541,69 @@ class QuantParams:
         c0, c1 = lo // self.qchunk, -(-hi // self.qchunk)
         return TileSource("q8", self.data[lo:hi], self.scales[c0:c1],
                           self.qchunk, base)
+
+
+# ---------------------------------------------------------------------------
+# partial-aggregate payloads (wire codec 0xF4 — edge-aggregator tier)
+# ---------------------------------------------------------------------------
+class PartialSum:
+    """Zero-copy view of a pre-reduced subtree payload (codec ``partial``).
+
+    An edge aggregator folds its subtree's fit results with the same
+    :class:`~repro.fl.agg_kernels.StreamingWeightedSum` chunk arithmetic
+    the root uses and ships the *unscaled* fp64 accumulator — one vector
+    ``sum_i w_i x_i`` plus the subtree's total weight ``W``, contributing
+    client count, sorted node ids, and any per-node failures it absorbed.
+    The root then folds O(#edges) of these (``acc += S_e``; one divide by
+    the global W at finalize) instead of O(#clients) client payloads.
+
+    Implements the chunked-read protocol (``layout`` / :meth:`f64_chunk` /
+    :meth:`decode_chunk` / :meth:`nbytes`) so the kernels stream it like
+    any payload; it is **not** parameters — decoders asked to materialize
+    it as a model raise ``UnsupportedCodec`` (see ``messages._unframe``).
+    """
+
+    __slots__ = ("layout", "data", "total_w", "count", "node_ids",
+                 "failures", "_memo_token")
+
+    def __init__(self, layout: Layout, data: np.ndarray, total_w: float,
+                 count: int, node_ids: Tuple[str, ...] = (),
+                 failures: Tuple[Tuple[str, str], ...] = ()):
+        assert data.dtype == np.float64 and data.ndim == 1
+        assert data.size == layout.total_size, (data.size, layout)
+        self.layout = layout
+        self.data = data
+        self.total_w = float(total_w)
+        self.count = int(count)
+        self.node_ids = tuple(node_ids)
+        self.failures = tuple((str(n), str(r)) for n, r in failures)
+        self._memo_token: Optional[str] = None
+
+    @classmethod
+    def from_buffer(cls, data, layout: Layout, total_w: float, count: int,
+                    node_ids: Tuple[str, ...] = (),
+                    failures: Tuple[Tuple[str, str], ...] = (),
+                    offset: int = 0) -> "PartialSum":
+        """Zero-copy wrap of a received frame payload (frozen view)."""
+        vec = np.frombuffer(data, np.float64, count=layout.total_size,
+                            offset=offset)
+        vec.flags.writeable = False
+        return cls(layout, vec, total_w, count, node_ids, failures)
+
+    # ------------------------------------------------------------- protocol
+    def f64_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        o = out[:hi - lo]
+        np.copyto(o, self.data[lo:hi])
+        return o
+
+    def decode_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        return self.f64_chunk(lo, hi, out)
+
+    def to_f64(self, out: Optional[np.ndarray] = None) -> np.ndarray:
+        if out is None:
+            return self.data.copy()
+        np.copyto(out[:self.data.size], self.data)
+        return out[:self.data.size]
+
+    def nbytes(self) -> int:
+        return int(self.data.nbytes)

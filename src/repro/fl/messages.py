@@ -20,6 +20,13 @@ codecs coexist behind a leading version byte:
   the *update* magnitude, not the weights.  Both lossy frames decode
   zero-copy into :class:`~repro.fl.flat.QuantParams`, which the
   aggregation kernels stream through fused dequantize+accumulate reads.
+- **partial** (magic ``0xF4``): an edge aggregator's pre-reduced subtree
+  sum — one raw fp64 ``Σw·x`` vector plus total weight / contributing
+  node ids in the header (:class:`~repro.fl.flat.PartialSum`).  Lossless
+  by construction; only the root server's fit accumulator consumes it —
+  parameter-decoding paths raise :class:`UnsupportedCodec` instead of
+  misreading a sum as a model (the downgrade path for peers that don't
+  speak the edge tier).
 - **legacy** (any other first byte — legacy messages start with a msgpack
   fixmap/fixarray marker): per-array ``(dtype, shape, raw-buffer)``
   msgpack triples, exactly the seed format, kept for on-the-wire
@@ -62,9 +69,9 @@ import numpy as np
 
 import jax
 
-from repro.fl.flat import (FlatParams, Layout, QCHUNK, QuantParams,
-                           WIRE_MAGIC_LO, WIRE_MAGICS, layout_for,
-                           np_dtype, quantizable, quantize_int8)
+from repro.fl.flat import (FlatParams, Layout, PartialSum, QCHUNK,
+                           QuantParams, WIRE_MAGIC_LO, WIRE_MAGICS,
+                           layout_for, np_dtype, quantizable, quantize_int8)
 
 NDArrays = List[np.ndarray]
 
@@ -72,6 +79,7 @@ NDArrays = List[np.ndarray]
 FLAT_MAGIC = WIRE_MAGICS["flat"]
 BF16_MAGIC = WIRE_MAGICS["bf16"]
 Q8_MAGIC = WIRE_MAGICS["q8"]
+PARTIAL_MAGIC = WIRE_MAGICS["partial"]
 _HEADER_ALIGN = 64       # payload starts 64-byte aligned for fast views
 
 #: every codec this build can encode AND decode (advertised by clients in
@@ -155,11 +163,11 @@ def _is_framed(b: bytes) -> bool:
 
 
 def _head_of(b: bytes) -> Tuple[Dict[str, Any], int]:
-    if b[0] not in (FLAT_MAGIC, BF16_MAGIC, Q8_MAGIC):
+    if b[0] not in (FLAT_MAGIC, BF16_MAGIC, Q8_MAGIC, PARTIAL_MAGIC):
         raise UnsupportedCodec(
             f"unknown wire codec version byte 0x{b[0]:02X}; this build "
-            f"decodes 0xF1 (flat) / 0xF2 (bf16) / 0xF3 (q8) and legacy "
-            f"msgpack frames")
+            f"decodes 0xF1 (flat) / 0xF2 (bf16) / 0xF3 (q8) / 0xF4 "
+            f"(partial) and legacy msgpack frames")
     (hlen,) = struct.unpack_from("<I", b, 1)
     return msgpack.unpackb(memoryview(b)[5:5 + hlen], raw=False), hlen
 
@@ -201,6 +209,12 @@ def _unframe(b: bytes, writable: bool = False
         data.flags.writeable = False
         return head, QuantParams(layout, "q8", data, scales, qchunk,
                                  is_delta=is_delta)
+    if b[0] == PARTIAL_MAGIC:
+        # edge-tier partial aggregate: one fp64 Σw·x vector, zero-copy
+        return head, PartialSum.from_buffer(
+            b, layout, head.get("w", 0.0), head.get("n", 0),
+            tuple(head.get("ids", [])),
+            tuple((n, r) for n, r in head.get("f", [])), offset=off)
     # _head_of above already rejects unknown bytes; keep the dispatch
     # locally exhaustive so a new registry entry cannot fall through to
     # a wrong decoder (codec-dispatch invariant, docs/INVARIANTS.md)
@@ -300,7 +314,7 @@ def arrays_to_bytes(arrays: NDArrays, codec: Optional[str] = None) -> bytes:
 def bytes_to_arrays(b: bytes) -> NDArrays:
     if _is_framed(b):
         _, p = _unframe(b, writable=True)         # one-shot path, not hot
-        return p.to_arrays()
+        return _materialized(p).to_arrays()
     return [_unpack_array(d) for d in msgpack.unpackb(b, raw=False)]
 
 
@@ -339,6 +353,11 @@ class FitRes:
     flat: Optional[FlatParams] = field(default=None, repr=False, compare=False)
     quant: Optional[QuantParams] = field(default=None, repr=False,
                                          compare=False)
+    # set when the result is an edge-aggregator partial sum (0xF4): a
+    # pre-reduced Σw·x over the sender's subtree, consumed only by
+    # weighted-sum fit accumulators (strategy.supports_partial())
+    partial: Optional[PartialSum] = field(default=None, repr=False,
+                                          compare=False)
 
     def set_parameters(self, arrays: NDArrays,
                        flat: Optional[FlatParams] = None) -> None:
@@ -346,11 +365,17 @@ class FitRes:
         self.parameters = arrays
         self.flat = flat
         self.quant = None
+        self.partial = None
 
     def materialize(self) -> NDArrays:
         """Per-leaf fp32 arrays, dequantizing if the result is compressed
         (a delta-encoded result needs its ``quant.base`` attached)."""
         if self.parameters is None:
+            if self.partial is not None:
+                raise UnsupportedCodec(
+                    "partial-aggregate results are pre-reduced sums, not "
+                    "parameters; only weighted-sum fit accumulators "
+                    "(FedAvg family) can fold them")
             self.parameters = self.quant.to_arrays()
         return self.parameters
 
@@ -403,6 +428,14 @@ def _materialized(p) -> FlatParams:
     """FlatParams for a client-facing decode: 0xF1 payloads arrive here
     already copied into a writable buffer (``_unframe(writable=True)``);
     quantized payloads materialize fresh (writable) fp32 arrays."""
+    if isinstance(p, PartialSum):
+        # the downgrade path for peers that don't speak the edge tier: a
+        # partial-aggregate frame is a pre-reduced SUM, not parameters —
+        # only the root's fit accumulator may consume it
+        raise UnsupportedCodec(
+            "partial-aggregate frame (0xF4) carries a pre-reduced subtree "
+            "sum, not model parameters; it cannot be materialized — only "
+            "the root server's fit accumulator consumes it")
     if isinstance(p, QuantParams):
         if p.is_delta:
             raise ValueError(
@@ -449,12 +482,35 @@ def encode_fit_res(x: FitRes, codec: Optional[str] = None,
 def decode_fit_res(b: bytes) -> FitRes:
     if _is_framed(b):
         head, p = _unframe(b)
+        if isinstance(p, PartialSum):
+            # edge tier: num_examples reports the contributing-client
+            # count; the fold weight is p.total_w, read by the accumulator
+            return FitRes(None, p.count, head.get("m", {}), partial=p)
         if isinstance(p, QuantParams):
             # hot path stays compressed: kernels stream it via f64_chunk
             return FitRes(None, head["n"], head.get("m", {}), quant=p)
         return FitRes(p.to_arrays(), head["n"], head.get("m", {}), flat=p)
     d = msgpack.unpackb(b, raw=False)
     return FitRes([_unpack_array(a) for a in d["p"]], d["n"], d["m"])
+
+
+def encode_partial_fit_res(ps: PartialSum,
+                           metrics: Optional[Dict[str, Any]] = None
+                           ) -> bytes:
+    """Frame an edge aggregator's pre-reduced subtree sum (codec 0xF4).
+
+    The payload is the raw little-endian fp64 ``Σw·x`` vector — lossless,
+    so the root's fold continues the edge's accumulation bitwise.  The
+    header carries the subtree total weight (``w``), contributing client
+    count (``n``), sorted contributing node ids (``ids``) and absorbed
+    per-node failures (``f``)."""
+    head = {"l": [[l.dtype, list(l.shape)] for l in ps.layout.leaves],
+            "w": float(ps.total_w), "n": int(ps.count),
+            "ids": list(ps.node_ids),
+            "f": [[n, r] for n, r in ps.failures],
+            "m": _enc_config(metrics or {})}
+    return _frame(PARTIAL_MAGIC, head,
+                  np.ascontiguousarray(ps.data).view(np.uint8))
 
 
 def encode_evaluate_ins(x: EvaluateIns, codec: Optional[str] = None) -> bytes:

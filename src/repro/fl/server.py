@@ -21,6 +21,8 @@ from repro.fl.messages import (WIRE_CODECS, EvaluateRes, TaskIns,
                                decode_properties_res, decode_task_res,
                                encode_evaluate_ins, encode_fit_ins,
                                encode_task_ins, bytes_to_arrays, peek_params)
+from repro.fl.fedbuff import FedBuffBuffer
+from repro.fl.registry import PopulationRegistry
 from repro.fl.strategy import Strategy
 
 NDArrays = List[np.ndarray]
@@ -52,6 +54,25 @@ class ServerConfig:
     # repro.launch.mesh.make_agg_mesh and StreamingWeightedSum.
     agg_shards: Optional[int] = None
     shard_mesh: Optional[Any] = None
+    # fleet sampling: draw sample_k of the connected nodes each round
+    # (availability-weighted via repro.fl.registry.PopulationRegistry,
+    # seeded by sample_seed so runs replay).  None = everyone, the
+    # pre-sampling behavior.
+    sample_k: Optional[int] = None
+    sample_seed: int = 0
+    sample_min_weight: float = 0.05
+    # async FedBuff mode (repro.fl.fedbuff): fold updates as they
+    # arrive with a staleness-discounted weight; advance the global
+    # version every async_buffer_k folds; drop updates staler than
+    # async_max_staleness.  num_rounds counts version advances.
+    # async_concurrency caps in-flight fit tasks (None = whole pool);
+    # evaluate runs every async_eval_every advances (0 = never).
+    async_mode: bool = False
+    async_buffer_k: int = 2
+    async_max_staleness: int = 4
+    async_staleness_exponent: float = 0.5
+    async_concurrency: Optional[int] = None
+    async_eval_every: int = 1
 
 
 class Driver:
@@ -116,6 +137,8 @@ class ServerApp:
     def __init__(self, config: ServerConfig, strategy: Strategy):
         self.config = config
         self.strategy = strategy
+        self.registry = PopulationRegistry(
+            seed=config.sample_seed, min_weight=config.sample_min_weight)
         if config.agg_backend is not None and hasattr(strategy, "backend"):
             strategy.backend = config.agg_backend
         if config.agg_shards is not None and hasattr(strategy, "shards"):
@@ -206,8 +229,83 @@ class ServerApp:
                             f"{','.join(culprits) or 'empty fleet'}")
         return want, ""
 
+    # ------------------------------------------------ shared round phases
+    def _initial_parameters(self, driver: Driver,
+                            nodes: List[str]) -> NDArrays:
+        """Round 0: pull initial parameters from the fleet — probed in
+        small waves, each under ONE shared deadline and first success
+        wins, so dead nodes neither abort the run nor stack up per-node
+        timeouts, and a large fleet doesn't upload N models.  (On a
+        blocking-only driver each wave is all-or-nothing: a dead node
+        costs its whole wave, and the next wave is probed instead.)"""
+        parameters = None
+        errors: List[Tuple[str, str]] = []
+        for lo in range(0, len(nodes), 3):
+            wave = nodes[lo:lo + 3]
+            tasks = {node: encode_task_ins(TaskIns(
+                "get_parameters", 0, b"", task_id=uuid.uuid4().hex))
+                for node in wave}
+            received = set()
+            for node, tr_bytes in driver.send_and_receive_iter(
+                    tasks, self.config.round_timeout):
+                received.add(node)
+                try:
+                    tr = decode_task_res(tr_bytes)
+                    if tr.error:
+                        errors.append((node, tr.error))
+                        continue
+                    parameters = bytes_to_arrays(tr.payload)
+                except Exception as e:  # noqa: BLE001 — bad payload
+                    errors.append((node, f"malformed response: {e!r}"))
+                    continue
+                break                # closing the iter reaps the rest
+            if parameters is not None:
+                return parameters
+            errors.extend((n, "timeout") for n in wave
+                          if n not in received)
+        raise RuntimeError(
+            f"no node returned initial parameters: {errors}")
+
+    def _round_participants(self, nodes: List[str], rnd: int) -> List[str]:
+        """The nodes this round talks to: everyone, or ``sample_k`` of
+        them drawn availability-weighted from the registry."""
+        if self.config.sample_k is None:
+            return nodes
+        return self.registry.sample(nodes, self.config.sample_k, rnd)
+
+    def _evaluate_phase(self, driver: Driver, rnd: int,
+                        parameters: NDArrays, nodes: List[str],
+                        enc_codec: Optional[str], record: RoundRecord
+                        ) -> None:
+        """Configure/dispatch/aggregate one evaluate phase into
+        ``record`` (no-op if the strategy declines to evaluate)."""
+        ev_cfg = self.strategy.configure_evaluate(rnd, parameters, nodes)
+        if not ev_cfg:
+            return
+        tasks = {}
+        ev_memo: Dict[Any, bytes] = {}
+        for node, ins in ev_cfg.items():
+            payload = self._memo_encode(ev_memo, ins,
+                                        encode_evaluate_ins, enc_codec)
+            t = TaskIns("evaluate", rnd, payload,
+                        task_id=uuid.uuid4().hex)
+            tasks[node] = encode_task_ins(t)
+        ev_results: List[Tuple[str, EvaluateRes]] = []
+        ev_failures = self._exchange(
+            driver, tasks, self.config.round_timeout,
+            lambda node, tr: ev_results.append(
+                (node, decode_evaluate_res(tr.payload))))
+        ev_results.sort()              # arrival order -> deterministic
+        loss, ev_metrics = self.strategy.aggregate_evaluate(
+            rnd, ev_results, ev_failures)
+        record.loss = loss
+        record.metrics.update(ev_metrics)
+        record.failures.extend(ev_failures)
+
     # ------------------------------------------------------------- rounds
     def run(self, driver: Driver) -> History:
+        if self.config.async_mode:
+            return self.run_async(driver)
         history = History()
         nodes = sorted(driver.node_ids())
         if not nodes:
@@ -217,51 +315,26 @@ class ServerApp:
         # legitimately be "legacy" for mixed-fleet deployments)
         enc_codec = None if wire_codec == "flat" else wire_codec
 
-        # round 0: pull initial parameters if the strategy does not provide
-        # them — probed in small waves, each under ONE shared deadline and
-        # first success wins, so dead nodes neither abort the run nor stack
-        # up per-node timeouts, and a large fleet doesn't upload N models.
-        # (On a blocking-only driver each wave is all-or-nothing: a dead
-        # node costs its whole wave, and the next wave is probed instead.)
         parameters = self.strategy.initialize_parameters()
         if parameters is None:
-            errors: List[Tuple[str, str]] = []
-            for lo in range(0, len(nodes), 3):
-                wave = nodes[lo:lo + 3]
-                tasks = {node: encode_task_ins(TaskIns(
-                    "get_parameters", 0, b"", task_id=uuid.uuid4().hex))
-                    for node in wave}
-                received = set()
-                for node, tr_bytes in driver.send_and_receive_iter(
-                        tasks, self.config.round_timeout):
-                    received.add(node)
-                    try:
-                        tr = decode_task_res(tr_bytes)
-                        if tr.error:
-                            errors.append((node, tr.error))
-                            continue
-                        parameters = bytes_to_arrays(tr.payload)
-                    except Exception as e:  # noqa: BLE001 — bad payload
-                        errors.append((node, f"malformed response: {e!r}"))
-                        continue
-                    break                # closing the iter reaps the rest
-                if parameters is not None:
-                    break
-                errors.extend((n, "timeout") for n in wave
-                              if n not in received)
-            if parameters is None:
-                raise RuntimeError(
-                    f"no node returned initial parameters: {errors}")
+            parameters = self._initial_parameters(driver, nodes)
+        partial_ok = self.strategy.supports_partial()
 
         for rnd in range(1, self.config.num_rounds + 1):
+            participants = self._round_participants(nodes, rnd)
             # ---- fit phase ----------------------------------------------
-            fit_cfg = self.strategy.configure_fit(rnd, parameters, nodes)
+            fit_cfg = self.strategy.configure_fit(rnd, parameters,
+                                                  participants)
             tasks = {}
             fit_payloads: Dict[str, bytes] = {}
             enc_memo: Dict[Any, bytes] = {}
             for node, ins in fit_cfg.items():
                 if wire_codec != "flat":
                     ins.config.setdefault("codec", wire_codec)
+                if partial_ok:
+                    # edge aggregators may pre-reduce their subtree into
+                    # one 0xF4 partial-sum frame; leaf clients ignore it
+                    ins.config.setdefault("partial", 1)
                 payload = self._memo_encode(enc_memo, ins, encode_fit_ins,
                                             enc_codec)
                 fit_payloads[node] = payload
@@ -280,12 +353,15 @@ class ServerApp:
                     bp = bases[id(p)] = peek_params(p)
                 return bp
 
+            fit_ok: List[str] = []
+
             def on_fit(node, tr):
                 res = decode_fit_res(tr.payload)
                 q = res.quant
                 if q is not None and q.is_delta and q.base is None:
                     q.base = _base_for(node)
                 acc.add(node, res)
+                fit_ok.append(node)
 
             # results fold into the strategy's accumulator as they arrive
             # (zero-copy flat views / streaming sums — no per-layer stacking)
@@ -296,7 +372,6 @@ class ServerApp:
             parameters, agg_metrics = acc.finalize(failures)
 
             # ---- evaluate phase ------------------------------------------
-            ev_cfg = self.strategy.configure_evaluate(rnd, parameters, nodes)
             record = RoundRecord(rnd, metrics=dict(agg_metrics),
                                  failures=list(failures))
             if self.config.codec and self.config.codec != "flat":
@@ -307,28 +382,146 @@ class ServerApp:
                 if demotion:
                     record.metrics.setdefault("wire_codec_demotion",
                                               demotion)
-            if ev_cfg:
-                tasks = {}
-                ev_memo: Dict[Any, bytes] = {}
-                for node, ins in ev_cfg.items():
-                    payload = self._memo_encode(ev_memo, ins,
-                                                encode_evaluate_ins,
-                                                enc_codec)
-                    t = TaskIns("evaluate", rnd, payload,
-                                task_id=uuid.uuid4().hex)
-                    tasks[node] = encode_task_ins(t)
-                ev_results: List[Tuple[str, EvaluateRes]] = []
-                ev_failures = self._exchange(
-                    driver, tasks, self.config.round_timeout,
-                    lambda node, tr: ev_results.append(
-                        (node, decode_evaluate_res(tr.payload))))
-                ev_results.sort()          # arrival order -> deterministic
-                loss, ev_metrics = self.strategy.aggregate_evaluate(
-                    rnd, ev_results, ev_failures)
-                record.loss = loss
-                record.metrics.update(ev_metrics)
-                record.failures.extend(ev_failures)
+            self._evaluate_phase(driver, rnd, parameters, participants,
+                                 enc_codec, record)
+            # availability feedback drives the next round's sampling
+            self.registry.observe(fit_ok, record.failures)
             history.rounds.append(record)
 
+        history.final_parameters = parameters
+        return history
+
+    # -------------------------------------------------------------- async
+    def run_async(self, driver: Driver) -> History:
+        """FedBuff-style asynchronous run (see :mod:`repro.fl.fedbuff`).
+
+        Needs a streaming driver exposing ``open_stream()`` (e.g.
+        SuperLinkDriver): fit tasks stay in flight continuously, each
+        arriving update folds immediately with a staleness-discounted
+        weight, and the global version advances every ``async_buffer_k``
+        folds — ``num_rounds`` counts advances.  One RoundRecord per
+        advance; evaluate runs every ``async_eval_every`` advances.
+        """
+        open_stream = getattr(driver, "open_stream", None)
+        if open_stream is None:
+            raise RuntimeError(
+                "async_mode needs a streaming driver with open_stream() "
+                "(e.g. SuperLinkDriver)")
+        cfg = self.config
+        history = History()
+        nodes = sorted(driver.node_ids())
+        if not nodes:
+            raise RuntimeError("no connected nodes")
+        wire_codec, demotion = self._negotiate_codec(driver, nodes)
+        enc_codec = None if wire_codec == "flat" else wire_codec
+        parameters = self.strategy.initialize_parameters()
+        if parameters is None:
+            parameters = self._initial_parameters(driver, nodes)
+        partial_ok = self.strategy.supports_partial()
+        buf = FedBuffBuffer(
+            self.strategy, buffer_k=cfg.async_buffer_k,
+            max_staleness=cfg.async_max_staleness,
+            staleness_exponent=cfg.async_staleness_exponent)
+        pool = self._round_participants(nodes, 0)
+        width = min(cfg.async_concurrency or len(pool), len(pool))
+
+        # one encoded downlink per (version, distinct config).  The memos
+        # are kept for the whole run: delta bases are keyed by payload
+        # identity, so every dispatched payload must stay alive or a
+        # recycled id() could alias a stale base.
+        enc_memos: Dict[int, Dict[Any, bytes]] = {}
+        bases: Dict[int, Any] = {}
+
+        def base_for(payload: bytes):
+            bp = bases.get(id(payload))
+            if bp is None:
+                bp = bases[id(payload)] = peek_params(payload)
+            return bp
+
+        # task_id -> (node, trained_version, downlink payload)
+        outstanding: Dict[str, Tuple[str, int, bytes]] = {}
+
+        def dispatch(stream, node: str) -> None:
+            ver = buf.version
+            ins = self.strategy.configure_fit(ver, parameters,
+                                              [node])[node]
+            if wire_codec != "flat":
+                ins.config.setdefault("codec", wire_codec)
+            if partial_ok:
+                ins.config.setdefault("partial", 1)
+            memo = enc_memos.setdefault(ver, {})
+            payload = self._memo_encode(memo, ins, encode_fit_ins,
+                                        enc_codec)
+            t = TaskIns("fit", ver, payload, task_id=uuid.uuid4().hex)
+            tids = stream.send({node: encode_task_ins(t)})
+            outstanding[tids[node]] = (node, ver, payload)
+
+        fit_ok: List[str] = []
+        failures: List[Tuple[str, str]] = []
+        stream = open_stream()
+        try:
+            for node in pool[:width]:
+                dispatch(stream, node)
+            while buf.version < cfg.num_rounds:
+                got = stream.recv(cfg.round_timeout)
+                if got is None:
+                    # nothing arrived within a full round_timeout: the
+                    # in-flight fleet is dead/stalled — record and stop
+                    for _tid, sent in sorted(outstanding.items()):
+                        failures.append((sent[0], "timeout"))
+                    break
+                _node, tid, tr_bytes = got
+                sent = outstanding.pop(tid, None)
+                if sent is None:
+                    continue         # late duplicate of a reaped task
+                node, ver, payload = sent
+                try:
+                    tr = decode_task_res(tr_bytes)
+                    if tr.error:
+                        failures.append((node, tr.error))
+                    else:
+                        res = decode_fit_res(tr.payload)
+                        q = res.quant
+                        if q is not None and q.is_delta and q.base is None:
+                            q.base = base_for(payload)
+                        if buf.offer(node, res, ver,
+                                     parameters) == "stale":
+                            failures.append(
+                                (node, f"stale update dropped (trained "
+                                       f"at v{ver}, server at "
+                                       f"v{buf.version})"))
+                        else:
+                            fit_ok.append(node)
+                except Exception as e:  # noqa: BLE001 — byzantine payload
+                    failures.append((node, f"malformed response: {e!r}"))
+                if buf.ready():
+                    parameters, adv_metrics = buf.advance(parameters)
+                    record = RoundRecord(buf.version,
+                                         metrics=dict(adv_metrics),
+                                         failures=list(failures))
+                    if cfg.codec and cfg.codec != "flat":
+                        record.metrics.setdefault("wire_codec",
+                                                  wire_codec)
+                        if demotion:
+                            record.metrics.setdefault(
+                                "wire_codec_demotion", demotion)
+                    if cfg.async_eval_every and (
+                            buf.version % cfg.async_eval_every == 0
+                            or buf.version == cfg.num_rounds):
+                        self._evaluate_phase(driver, buf.version,
+                                             parameters, pool,
+                                             enc_codec, record)
+                    self.registry.observe(fit_ok, record.failures)
+                    fit_ok, failures = [], []
+                    history.rounds.append(record)
+                if buf.version < cfg.num_rounds:
+                    dispatch(stream, node)
+        finally:
+            stream.close()
+        if fit_ok or failures:
+            # stragglers that landed after the final advance
+            self.registry.observe(fit_ok, failures)
+            if history.rounds:
+                history.rounds[-1].failures.extend(failures)
         history.final_parameters = parameters
         return history

@@ -51,6 +51,14 @@ def _flat_of(res: FitRes):
     still-compressed QuantParams for quantized ones (the kernels stream
     either through the fused ``f64_chunk`` protocol) — packing only if it
     has neither."""
+    if res.partial is not None:
+        # pre-reduced sums are not per-client updates; strategies that
+        # need every update (median/trim/Krum, SecAgg) must not receive
+        # them — the ServerApp only requests the edge tier when
+        # strategy.supports_partial() says the fold is a weighted sum
+        raise ValueError(
+            "partial-aggregate result reached a per-client accumulator; "
+            "this strategy cannot fold pre-reduced sums")
     if res.flat is not None:
         return res.flat
     if res.quant is not None:
@@ -116,6 +124,15 @@ class Strategy:
     def initialize_parameters(self) -> Optional[NDArrays]:
         return None
 
+    def supports_partial(self) -> bool:
+        """True when this strategy's fit aggregate is a weighted sum, so
+        edge aggregators may pre-reduce their subtree into one
+        partial-sum payload (0xF4).  Strategies that need every client's
+        update (median/trimmed-mean/Krum, SecAgg) return False — the
+        ServerApp then never requests the pre-reduction and edges fall
+        back to forwarding a plain weighted-mean result."""
+        return False
+
     def configure_fit(self, rnd: int, parameters: NDArrays,
                       nodes: Sequence[str]) -> Dict[str, FitIns]:
         return {n: FitIns(parameters, {"round": rnd}) for n in nodes}
@@ -169,10 +186,29 @@ class _WeightedFitAcc(FitAccumulator):
     def __init__(self, strategy: "FedAvg", rnd: int, current: NDArrays):
         super().__init__(strategy, rnd, current)
         self.pairs: List[Tuple[str, FlatParams, float]] = []
+        self.partials: List[Tuple[str, Any]] = []   # (node, PartialSum)
         self._streaming: Optional[kernels.StreamingWeightedSum] = None
         self._count = 0
+        self._payloads = 0
+
+    def _make_streaming(self, layout) -> kernels.StreamingWeightedSum:
+        st = self.strategy
+        return kernels.StreamingWeightedSum(
+            layout, backend=st.backend, shards=st.shards,
+            mesh=st.shard_mesh, overlap=st.overlap_decode)
 
     def add(self, node: str, res: FitRes) -> None:
+        if res.partial is not None:
+            # edge-tier pre-reduced sum: buffered and folded in canonical
+            # node order at finalize, so the aggregate is independent of
+            # which edge finished first.  Counts its whole subtree toward
+            # quorum.
+            ps = res.partial
+            _check_shapes(ps, self.current, node)
+            self.partials.append((node, ps))
+            self._count += ps.count
+            self._payloads += 1
+            return
         fp = _flat_of(res)
         _check_shapes(fp, self.current, node)
         w = float(res.num_examples)
@@ -184,13 +220,12 @@ class _WeightedFitAcc(FitAccumulator):
             # streaming: the per-shard accumulators ARE the low-memory
             # server state.
             if self._streaming is None:
-                self._streaming = kernels.StreamingWeightedSum(
-                    fp.layout, backend=st.backend, shards=st.shards,
-                    mesh=st.shard_mesh, overlap=st.overlap_decode)
+                self._streaming = self._make_streaming(fp.layout)
             self._streaming.add(fp, w)      # payload is droppable after this
         else:
             self.pairs.append((node, fp, w))
         self._count += 1        # only after the fold/append succeeded
+        self._payloads += 1
 
     def finalize(self, failures: List[Tuple[str, str]]
                  ) -> Tuple[NDArrays, Dict[str, Any]]:
@@ -200,6 +235,22 @@ class _WeightedFitAcc(FitAccumulator):
             raise QuorumNotMet(
                 f"round {self.rnd}: {self._count} results < quorum "
                 f"{need} (failures: {failures})")
+        if self.partials:
+            # any partial forces the streaming fold (a pre-reduced sum
+            # has no per-client rows for the deferred kernel): leaves
+            # first in canonical node order, then partials likewise —
+            # one edge over the whole fleet continues the flat
+            # low-memory fold bitwise (acc = 0 + S_e; one divide by W)
+            if self._streaming is None:
+                self._streaming = self._make_streaming(
+                    self.partials[0][1].layout)
+            self.pairs.sort(key=lambda p: p[0])
+            for _, fp, w in self.pairs:
+                self._streaming.add(fp, w)
+            self.pairs = []
+            self.partials.sort(key=lambda p: p[0])
+            for _, ps in self.partials:
+                self._streaming.add_partial(ps)
         if self._streaming is not None:
             target = self._streaming.finalize()
         else:
@@ -208,7 +259,13 @@ class _WeightedFitAcc(FitAccumulator):
             pairs = [(fp, w) for _, fp, w in self.pairs]
             target = kernels.weighted_mean(pairs, pairs[0][0].layout,
                                            backend=st.backend)
-        metrics = {"num_clients": self._count}
+        metrics = {"num_clients": self._count,
+                   "num_payloads": self._payloads}
+        sub_failures = sorted(
+            (n, r) for _, ps in self.partials for n, r in ps.failures)
+        if sub_failures:
+            # subtree failures the edges absorbed, surfaced round-level
+            metrics["subtree_failures"] = [list(x) for x in sub_failures]
         return st._server_opt(self.rnd, target, self.current), metrics
 
 
@@ -256,6 +313,12 @@ class FedAvg(Strategy):
 
     def initialize_parameters(self):
         return self.initial_parameters
+
+    def supports_partial(self) -> bool:
+        # the weighted-sum pre-reduction is only sound when the fit
+        # aggregate IS the weighted sum; a subclass that overrode the
+        # batch API gets the conservative default
+        return type(self).aggregate_fit is FedAvg.aggregate_fit
 
     def fit_accumulator(self, rnd, current):
         if type(self).aggregate_fit is not FedAvg.aggregate_fit:
@@ -461,6 +524,9 @@ class _StackedFitAcc(FitAccumulator):
 
 
 class _StackedStrategyMixin:
+    def supports_partial(self) -> bool:
+        return False    # median/trim/Krum need every client's update
+
     def fit_accumulator(self, rnd, current):
         return _StackedFitAcc(self, rnd, current)
 

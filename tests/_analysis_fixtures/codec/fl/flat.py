@@ -9,6 +9,7 @@ WIRE_MAGICS: Dict[str, int] = {
     "flat": 0xF1,
     "bf16": 0xF2,
     "q8": 0xF3,
+    "partial": 0xF4,
     "metric_batch": 0xFB,
 }
-PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8")
+PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8", "partial")
