@@ -60,14 +60,17 @@ from typing import Dict, List
 #: convergence checks below)
 GATED_PREFIXES = ("agg_throughput_", "quantized_agg_", "pallas_agg_",
                   "wire_bytes_", "wire_codec_convergence", "shard_agg_",
-                  "hier_agg_", "async_ttl_")
+                  "hier_agg_", "async_ttl_", "tcp_round_")
 #: higher-is-better derived fields compared under the threshold
 GATED_FIELDS = ("mbps", "speedup_vs_legacy", "overlap_speedup")
 #: boolean derived fields that must hold wherever they appear
+#: (``tcp_round_*``: ``match`` is the bitwise 16-process-vs-inproc round,
+#: ``backpressure_ok`` holds the flooded server's RSS growth under the
+#: ceiling — wall-clock on those rows is NOT gated, socket timing varies)
 INVARIANT_FLAGS = ("match", "match_tol", "bitwise_match", "within_tol",
                    "q8_match", "shard_mem_ok", "root_payloads_ok",
                    "delivered_ok", "async_reached", "staleness_ok",
-                   "ttl_ok")
+                   "ttl_ok", "backpressure_ok")
 #: wire_bytes_* rows must keep at least this payload reduction vs fp32
 MIN_WIRE_REDUCTION = 3.5
 #: shard_agg_* rows must keep at least this speedup over the legacy
@@ -89,11 +92,16 @@ def _skipped(row: dict) -> bool:
 
 
 def compare_rows(base: Dict[str, dict], new: Dict[str, dict],
-                 threshold: float) -> List[str]:
-    """All trajectory violations, empty when the gate passes."""
+                 threshold: float, prefix: str = "") -> List[str]:
+    """All trajectory violations, empty when the gate passes.  A non-empty
+    ``prefix`` narrows the gate to rows starting with it (the tcp-mp lane
+    runs a focused ``--filter tcp`` bench, so every other gated row is
+    legitimately absent from its snapshot)."""
     problems: List[str] = []
     for name in sorted(base):
         if not name.startswith(GATED_PREFIXES) or _skipped(base[name]):
+            continue
+        if prefix and not name.startswith(prefix):
             continue
         if name not in new or _skipped(new[name]):
             problems.append(f"{name}: gated row missing/skipped in the new "
@@ -117,6 +125,8 @@ def compare_rows(base: Dict[str, dict], new: Dict[str, dict],
     for name in sorted(new):
         derived = new[name].get("derived", {})
         if _skipped(new[name]):
+            continue
+        if prefix and not name.startswith(prefix):
             continue
         for flag in INVARIANT_FLAGS:
             if flag in derived and derived[flag] is not True:
@@ -148,11 +158,15 @@ def main(argv=None) -> int:
                         "BENCH_REGRESSION_THRESHOLD", "0.15")),
                     help="allowed fractional drop per gated field "
                          "(default 0.15)")
+    ap.add_argument("--prefix", default="",
+                    help="narrow the gate to rows starting with this "
+                         "prefix (focused lanes, e.g. --prefix tcp_round_)")
     args = ap.parse_args(argv)
     base, new = load_rows(args.baseline), load_rows(args.snapshot)
     gated = [n for n in base if n.startswith(GATED_PREFIXES)
-             and not _skipped(base[n])]
-    problems = compare_rows(base, new, args.threshold)
+             and not _skipped(base[n])
+             and (not args.prefix or n.startswith(args.prefix))]
+    problems = compare_rows(base, new, args.threshold, args.prefix)
     print(f"benchmark trajectory: {len(gated)} gated rows, "
           f"threshold {args.threshold:.0%}")
     for name in sorted(gated):

@@ -862,6 +862,201 @@ def bench_async_ttl(quick=False):
           f"staleness_ok={staleness_ok};ttl_ok={ttl_ok}")
 
 
+# --------------------------------------------------------------------------
+# TCP transport (ISSUE 9): the 16-process socket round + backpressure flood
+# --------------------------------------------------------------------------
+def _tcp_det_client_app(node_id):
+    """Picklable ClientApp factory for spawned SuperNode processes: a
+    deterministic numpy update (fit adds a site-derived constant), so the
+    tcp-vs-inproc aggregate can be compared bitwise without training."""
+    import numpy as np
+
+    from repro.fl import ClientApp, NumPyClient
+
+    class Det(NumPyClient):
+        def __init__(self, cid):
+            self.idx = int(cid.rsplit("-", 1)[-1])
+
+        def fit(self, parameters, config):
+            out = [np.asarray(p, np.float32) + np.float32(self.idx + 1)
+                   for p in parameters]
+            return out, 10 + self.idx, {}
+
+        def evaluate(self, parameters, config):
+            loss = float(sum(np.abs(np.asarray(p)).sum()
+                             for p in parameters))
+            return loss, 10 + self.idx, {}
+
+    return ClientApp(lambda cid, n=node_id: Det(n).to_client())
+
+
+def _child_hwm_mb():
+    """This process's RSS high-water mark in MB.  NOT ru_maxrss: on this
+    kernel a spawned child inherits the parent's ru_maxrss watermark, so
+    after a big parent bench the child would report the parent's peak and
+    the growth measurement would be vacuously zero.  /proc VmHWM is reset
+    by exec and tracks only the child's own footprint."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM"):
+                    return int(line.split(":")[1].split()[0]) / 1024
+    except OSError:
+        pass
+    import resource
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+
+
+def _tcp_backpressure_server(q, n_peers, per_peer, credits, consume_sleep):
+    """Spawned slow-consumer server: reports its own RSS high-water so the
+    measurement is uncontaminated by the parent's 16 client threads."""
+    from repro.core.transport import TcpSuperLink
+
+    link = TcpSuperLink("127.0.0.1", 0, credits_per_peer=credits,
+                        heartbeat_timeout=120.0)
+    base_mb = _child_hwm_mb()
+    q.put(("ready", link.address, base_mb))
+    remaining = {f"flood-{i}-{k}" for i in range(n_peers)
+                 for k in range(per_peer)}
+    got = 0
+    give_up = time.monotonic() + 600
+    while remaining and time.monotonic() < give_up:
+        item = link.pull_any(list(remaining), time.monotonic() + 60)
+        if item is None:
+            break
+        remaining.discard(item[0])
+        got += 1
+        time.sleep(consume_sleep)        # the deliberately slow consumer
+    peak_mb = _child_hwm_mb()
+    link.close()
+    q.put(("done", got, peak_mb))
+
+
+def bench_tcp_round(quick=False):
+    """Real-socket transport rows (both gated on presence + flags):
+
+    ``tcp_round_16proc_quickstart`` — a 2-round deterministic fleet round
+    over 16 spawned SuperNode processes vs the identical in-proc fleet;
+    ``match`` is bitwise equality of the two loss histories.
+
+    ``tcp_round_16proc_backpressure`` — 16 fast client threads flood a
+    deliberately slow spawned server with results through a small credit
+    window; ``backpressure_ok`` holds the server's RSS *growth* under a
+    ceiling that unthrottled buffering of the flood would blow through —
+    the sender blocks, the server does not balloon.
+    """
+    import multiprocessing as mp
+
+    from repro.core.superlink import (NativeConnection, SuperLink,
+                                      SuperLinkDriver, SuperNode)
+    from repro.core.transport import (TcpFleetConnection, TcpSuperLink,
+                                      run_supernode)
+    from repro.fl import ServerApp, ServerConfig, make_strategy
+
+    n_procs, rounds = 16, 2
+    sites = [f"proc-{i}" for i in range(n_procs)]
+
+    def server_app():
+        initial = [np.linspace(-1.0, 1.0, 32, np.float32).reshape(8, 4),
+                   np.zeros(8, np.float32)]
+        return ServerApp(ServerConfig(num_rounds=rounds, round_timeout=120),
+                         make_strategy("fedavg",
+                                       initial_parameters=initial))
+
+    # in-proc reference fold (threads, same apps)
+    link = SuperLink()
+    nodes = [SuperNode(s, _tcp_det_client_app(s), NativeConnection(link))
+             for s in sites]
+    for n in nodes:
+        n.start()
+    try:
+        t0 = time.perf_counter()
+        h_ref = server_app().run(SuperLinkDriver(link,
+                                                 expected_nodes=n_procs))
+        t_inproc = time.perf_counter() - t0
+    finally:
+        for n in nodes:
+            n.stop()
+
+    ctx = mp.get_context("spawn")            # JAX threads do not fork
+    with TcpSuperLink("127.0.0.1", 0, poll_wait=1.0,
+                      heartbeat_timeout=60.0) as tlink:
+        host, port = tlink.address
+        procs = [ctx.Process(target=run_supernode,
+                             args=(host, port, s, _tcp_det_client_app),
+                             kwargs=dict(run_seconds=600.0,
+                                         max_disconnected=10.0),
+                             daemon=True) for s in sites]
+        for p in procs:
+            p.start()
+        try:
+            join_deadline = time.monotonic() + 300
+            while len(tlink.node_ids()) < n_procs \
+                    and time.monotonic() < join_deadline:
+                time.sleep(0.2)
+            t0 = time.perf_counter()
+            h_tcp = server_app().run(SuperLinkDriver(
+                tlink, expected_nodes=n_procs))
+            t_tcp = time.perf_counter() - t0
+        finally:
+            tlink.close()
+            for p in procs:
+                p.join(timeout=30)
+                if p.is_alive():
+                    p.kill()
+    match = h_tcp.losses() == h_ref.losses()
+    print(f"tcp_round_16proc_quickstart,{t_tcp / rounds * 1e6:.0f},"
+          f"procs={n_procs};rounds={rounds};"
+          f"vs_inproc={t_tcp / max(t_inproc, 1e-9):.2f}x;match={match}")
+
+    # ---- backpressure flood: slow spawned server, 16 fast pushers ----
+    n_peers = 16
+    per_peer = 16 if quick else 32
+    payload = bytes(512 << 10)               # 512 KiB per result
+    credits = 1 << 20                        # 1 MiB window per peer
+    total_mb = n_peers * per_peer * len(payload) / 1e6
+    # held bytes are bounded by peers x 2x-window overshoot (~32 MB);
+    # the ceiling leaves allocator headroom yet sits far under the flood
+    ceiling_mb = 128.0
+    q = ctx.Queue()
+    server = ctx.Process(target=_tcp_backpressure_server,
+                         args=(q, n_peers, per_peer, credits, 0.005),
+                         daemon=True)
+    server.start()
+    tag, (host, port), base_mb = q.get(timeout=120)
+    assert tag == "ready"
+
+    def flood(i):
+        conn = TcpFleetConnection(host, port, f"flood-{i}",
+                                  request_timeout=600.0)
+        try:
+            for k in range(per_peer):
+                conn.push_result(f"flood-{i}-{k}", payload)
+        finally:
+            conn.close()
+
+    import threading
+    t0 = time.perf_counter()
+    threads = [threading.Thread(target=flood, args=(i,))
+               for i in range(n_peers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    tag, got, peak_mb = q.get(timeout=600)
+    server.join(timeout=30)
+    if server.is_alive():
+        server.kill()
+    dt = time.perf_counter() - t0
+    growth = peak_mb - base_mb
+    ok = bool(got == n_peers * per_peer and growth <= ceiling_mb)
+    print(f"tcp_round_16proc_backpressure,{dt * 1e6:.0f},"
+          f"pushed_mb={total_mb:.0f};window_mb={credits / 1e6:.0f};"
+          f"peak_rss_mb={peak_mb:.0f};rss_growth_mb={growth:.0f};"
+          f"ceiling_mb={ceiling_mb:.0f};delivered={got};"
+          f"backpressure_ok={ok}")
+
+
 class _Tee:
     """stdout wrapper that records everything written, so the CSV rows can
     be re-emitted as a structured ``BENCH_*.json`` snapshot."""
@@ -923,30 +1118,45 @@ def main() -> None:
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--filter", metavar="SUBSTR", default=None,
+                    help="only run benches whose name contains SUBSTR "
+                         "(e.g. --filter tcp for the CI tcp-mp lane)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="also write the rows as a BENCH_*.json snapshot "
                          "(consumed by benchmarks.compare in CI)")
     args, _ = ap.parse_known_args()
+    benches = [
+        ("fig5_reproducibility", bench_fig5_reproducibility),
+        ("fig6_metric_streaming", bench_fig6_metric_streaming),
+        ("s41_reliable_overhead", bench_s41_reliable_overhead),
+        ("s31_multi_job", bench_s31_multi_job),
+        ("strategies", bench_strategies),
+        ("secagg", bench_secagg),
+        ("kernels", bench_kernels),
+        ("agg_throughput", bench_agg_throughput),
+        ("pallas_agg", bench_pallas_agg),
+        ("shard_agg", bench_shard_agg),
+        ("wire_codecs", bench_wire_codecs),
+        ("wire_convergence", bench_wire_convergence),
+        ("straggler_overlap", bench_straggler_overlap),
+        ("hier_agg", bench_hier_agg),
+        ("async_ttl", bench_async_ttl),
+        ("tcp_round", bench_tcp_round),
+    ]
+    if args.filter:
+        benches = [(n, fn) for n, fn in benches if args.filter in n]
+        if not benches:
+            raise SystemExit(f"--filter {args.filter!r} matches no bench")
     tee = _Tee(sys.stdout)
     if args.json:
         sys.stdout = tee
+    ok = True
     try:
         print("name,us_per_call,derived")
-        ok = bench_fig5_reproducibility(args.quick)
-        bench_fig6_metric_streaming(args.quick)
-        bench_s41_reliable_overhead(args.quick)
-        bench_s31_multi_job(args.quick)
-        bench_strategies(args.quick)
-        bench_secagg(args.quick)
-        bench_kernels(args.quick)
-        bench_agg_throughput(args.quick)
-        bench_pallas_agg(args.quick)
-        bench_shard_agg(args.quick)
-        bench_wire_codecs(args.quick)
-        bench_wire_convergence(args.quick)
-        bench_straggler_overlap(args.quick)
-        bench_hier_agg(args.quick)
-        bench_async_ttl(args.quick)
+        for name, fn in benches:
+            out = fn(args.quick)
+            if name == "fig5_reproducibility":
+                ok = out
     finally:
         sys.stdout = tee.inner
     if args.json:

@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import msgpack
 
+from repro.core.framing import unpack_unary
 from repro.core.superlink import SuperLink
 from repro.runtime.ccp import JobContext
 from repro.runtime.reliable import RequestTimeout
@@ -20,9 +21,9 @@ class LGC:
         ctx.register_handler("flower/unary", self._on_unary)
 
     def _on_unary(self, msg: Message) -> bytes:
-        d = msgpack.unpackb(msg.payload, raw=False)
+        method, request = unpack_unary(msg.payload)
         try:
-            resp = self.link.fleet_unary(d["m"], d["q"])
+            resp = self.link.fleet_unary(method, request)
             return msgpack.packb({"r": resp, "e": ""}, use_bin_type=True)
         except Exception as e:  # noqa: BLE001
             # tag the error kind so the LGS can demote timeouts to a

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import msgpack
 
+from repro.core.framing import pack_unary
 from repro.core.superlink import FleetConnection
 from repro.runtime.ccp import JobContext
 from repro.runtime.reliable import RequestTimeout
@@ -25,7 +26,10 @@ class LGSConnection(FleetConnection):
         self.ctx = ctx
 
     def unary(self, method: str, request: bytes) -> bytes:
-        payload = msgpack.packb({"m": method, "q": request}, use_bin_type=True)
+        # the canonical unary envelope (shared with repro.core.framing's
+        # socket transport tooling, which carries the same call as a
+        # typed REQ header + raw body instead)
+        payload = pack_unary(method, request)
         # hop 1: SuperNode -> LGS (this call); hops 2-3: FLARE client ->
         # FLARE server (reliable, SCP-relayed) -> LGC.  A ReliableMessage
         # RequestTimeout propagates as-is: the SuperNode treats it as

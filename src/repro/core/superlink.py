@@ -78,6 +78,9 @@ class SuperLink:
         self._results_cv = threading.Condition()
         self._nodes: Dict[str, float] = {}                   # guarded-by: _lock
         self._lock = threading.Lock()
+        # long-poll wakeup for pull_task_wait; wraps the SAME lock, so
+        # every ``with self._lock`` block may wait/notify on it directly
+        self._tasks_cv = threading.Condition(self._lock)
         self.stats = {"late_dropped": 0, "discarded_ins": 0}  # guarded-by: _results_cv
 
     # ------------------------------------------------------------ fleet API
@@ -99,21 +102,69 @@ class SuperLink:
                                  use_bin_type=True)
         if method == "push_task_res":
             d = msgpack.unpackb(request, raw=False)
-            with self._results_cv:
-                if d["id"] in self._expired:
-                    # round already gave up on this task: drop the late
-                    # result so it cannot leak into a later round
-                    del self._expired[d["id"]]
-                    self.stats["late_dropped"] += 1
-                    return b"LATE"
-                w = self._waiters.pop(d["id"], None)
-                if w is not None:
-                    w.ready.append((d["id"], d["res"]))  # O(1) routing
-                else:
-                    self._results[d["id"]] = d["res"]
-                self._results_cv.notify_all()
-            return b"OK"
+            return b"OK" if self.push_task_result(d["id"], d["res"]) \
+                else b"LATE"
         raise ValueError(f"unknown fleet method {method!r}")
+
+    def pull_task_wait(self, node_id: str, timeout: float
+                       ) -> Tuple[str, bytes]:
+        """Long-poll variant of the fleet ``pull_task_ins``: block up to
+        ``timeout`` seconds for a task instead of returning empty
+        immediately.  The socket transport serves pulls with this so idle
+        peers park server-side instead of generating poll chatter; the
+        in-proc path keeps the instant (empty-capable) ``fleet_unary``.
+        Returns ``("", b"")`` on timeout."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            q = self._task_queues.setdefault(node_id, deque())
+            while not q:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return "", b""
+                self._tasks_cv.wait(remaining)
+            return q.popleft()
+
+    def push_task_result(self, task_id: str, res: bytes) -> bool:
+        """Complete ``task_id`` with ``res``; False if the round already
+        gave up on it (tombstoned — the late result is dropped so it
+        cannot leak into a later round).  This is the raw-body seam the
+        socket transport pushes through: its TaskRes bytes arrive as
+        read-only memoryviews over the receive buffer and are stored
+        as-is, zero-copy."""
+        dropped = False
+        with self._results_cv:
+            if task_id in self._expired:
+                del self._expired[task_id]
+                self.stats["late_dropped"] += 1
+                dropped = True
+            else:
+                w = self._waiters.pop(task_id, None)
+                if w is not None:
+                    w.ready.append((task_id, res))   # O(1) routing
+                else:
+                    self._results[task_id] = res
+                self._results_cv.notify_all()
+        if dropped:
+            self._result_released(task_id)
+        return not dropped
+
+    def mark_node_dead(self, node_id: str) -> bool:
+        """Heartbeat expiry (socket transport): drop the node from the
+        roster so the next round's ``node_ids`` excludes it.  Tasks it
+        already pulled keep their normal fate — the round deadline
+        demotes them to ``(node, "timeout")`` failure records — and
+        queued-but-undelivered TaskIns stay queued, so a reconnect
+        (re-register) resumes service where it left off.  Returns whether
+        the node was actually in the roster (idempotent)."""
+        with self._lock:
+            return self._nodes.pop(node_id, None) is not None
+
+    def _result_released(self, task_id: str) -> None:
+        """Subclass hook: ``task_id``'s result bytes permanently left the
+        completion queue (consumed by a waiter, dropped LATE, or
+        discarded).  The socket transport returns the pushing peer's
+        flow-control credits here.  Always invoked with no link locks
+        held, so overrides may take their own locks or perform I/O."""
 
     # ------------------------------------------------------------ driver API
     def node_ids(self) -> List[str]:
@@ -125,6 +176,7 @@ class SuperLink:
         with self._lock:
             self._task_queues.setdefault(node_id, deque()).append(
                 (task_id, task))
+            self._tasks_cv.notify_all()     # wake long-poll pulls
         return task_id
 
     def register_waiter(self, task_ids: Iterable[str]) -> _Waiter:
@@ -159,13 +211,19 @@ class SuperLink:
         ``deadline`` (``time.monotonic()`` timestamp) passes; returns
         ``(task_id, res_bytes)`` or ``None``.  Full-duration CV wait —
         no periodic polling, no per-wakeup id scan."""
+        got: Optional[Tuple[str, bytes]] = None
         with self._results_cv:
             while not w.ready:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    return None
+                    break
                 self._results_cv.wait(remaining)
-            return w.ready.popleft()
+            if w.ready:
+                got = w.ready.popleft()
+        if got is not None:
+            # outside the CV: the hook may take transport locks / do I/O
+            self._result_released(got[0])
+        return got
 
     def release_waiter(self, w: _Waiter,
                        task_ids: Iterable[str]) -> None:
@@ -221,17 +279,21 @@ class SuperLink:
                     undelivered.update(tid for tid, _ in q if tid in ids)
                     self._task_queues[node] = kept
         now = time.monotonic()
+        dropped: List[str] = []
         with self._results_cv:
             self.stats["discarded_ins"] += len(undelivered)
             for tid in ids:
                 self._waiters.pop(tid, None)     # stop routing to cursors
                 if self._results.pop(tid, None) is not None:
-                    continue                     # landed but unwanted: done
+                    dropped.append(tid)          # landed but unwanted: done
+                    continue
                 if tid not in undelivered:
                     self._expired[tid] = now     # delivered, still in flight
             cutoff = now - _TOMBSTONE_TTL
             for tid in [t for t, ts in self._expired.items() if ts < cutoff]:
                 del self._expired[tid]
+        for tid in dropped:
+            self._result_released(tid)
 
 
 class TaskStream:
@@ -350,10 +412,36 @@ class SuperLinkDriver(Driver):
 # connections (the pluggable wire)
 # ---------------------------------------------------------------------------
 class FleetConnection:
-    """gRPC-shaped unary interface a SuperNode talks through."""
+    """gRPC-shaped unary interface a SuperNode talks through.
+
+    The typed wrappers are what the :class:`SuperNode` loop calls; their
+    defaults ride :meth:`unary` with the in-proc msgpack envelopes, so
+    existing connections (native, LGS) inherit them unchanged while the
+    socket transport (:class:`repro.core.transport.TcpFleetConnection`)
+    overrides them with zero-copy framed calls.
+    """
 
     def unary(self, method: str, request: bytes) -> bytes:
         raise NotImplementedError
+
+    def register(self, node_id: str) -> None:
+        self.unary("register", node_id.encode())
+
+    def pull_task(self, node_id: str) -> Tuple[str, bytes]:
+        """Next queued TaskIns as ``(task_id, task_bytes)`` —
+        ``("", b"")`` when the queue is empty."""
+        d = msgpack.unpackb(self.unary("pull_task_ins", node_id.encode()),
+                            raw=False)
+        return d["id"], d["task"]
+
+    def push_result(self, task_id: str, res: bytes) -> None:
+        self.unary("push_task_res",
+                   msgpack.packb({"id": task_id, "res": res},
+                                 use_bin_type=True))
+
+    def close(self) -> None:
+        """Release transport resources (sockets, threads); in-proc
+        connections have none."""
 
 
 class NativeConnection(FleetConnection):
@@ -386,7 +474,7 @@ class SuperNode:
         self._thread: Optional[threading.Thread] = None
 
     def start(self) -> None:
-        self.conn.unary("register", self.node_id.encode())
+        self.conn.register(self.node_id)
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"supernode-{self.node_id}")
         self._thread.start()
@@ -394,26 +482,23 @@ class SuperNode:
     def _loop(self) -> None:
         while not self._stop.is_set():
             try:
-                resp = self.conn.unary("pull_task_ins", self.node_id.encode())
+                task_id, task = self.conn.pull_task(self.node_id)
             except (RequestTimeout, ConnectionError, OSError):
                 self.transport_errors += 1
                 self._stop.wait(10 * self.poll_interval)
                 continue
-            d = msgpack.unpackb(resp, raw=False)
-            if not d["id"]:
+            if not task_id:
                 self._stop.wait(self.poll_interval)
                 continue
             try:
-                res = self.app.handle(d["task"], cid=self.node_id)
+                res = self.app.handle(task, cid=self.node_id)
             except Exception as e:  # noqa: BLE001 — mod/decode blew up
                 # outside ClientApp.handle's own guard: report the real
                 # error instead of dying and ghosting as (node, "timeout")
                 res = encode_task_res(TaskRes("error", 0, b"",
                                               error=repr(e)))
             try:
-                self.conn.unary("push_task_res",
-                                msgpack.packb({"id": d["id"], "res": res},
-                                              use_bin_type=True))
+                self.conn.push_result(task_id, res)
             except (RequestTimeout, ConnectionError, OSError):
                 # undeliverable result: the server's deadline records the
                 # miss as (node, "timeout"); keep serving later rounds
@@ -422,6 +507,9 @@ class SuperNode:
 
     def stop(self) -> None:
         self._stop.set()
+        # closing first unblocks a pull parked in a socket long-poll, so
+        # the join below is prompt on the TCP transport too
+        self.conn.close()
         if self._thread:
             self._thread.join(timeout=2.0)
 

@@ -62,7 +62,14 @@ from __future__ import annotations
 
 import struct
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+# Decoders accept any byte-addressable buffer, not just ``bytes``: the
+# socket transport (repro.core.transport) hands frames over as read-only
+# memoryviews into its receive buffer, and every zero-copy path below
+# (msgpack.unpackb, np.frombuffer, FlatParams.from_buffer) consumes them
+# directly without an intermediate copy.
+Buffer = Union[bytes, bytearray, memoryview]
 
 import msgpack
 import numpy as np
@@ -155,14 +162,14 @@ def _aligned(n: int) -> int:
     return -(-n // _HEADER_ALIGN) * _HEADER_ALIGN
 
 
-def _is_framed(b: bytes) -> bool:
+def _is_framed(b: Buffer) -> bool:
     """Flat-family frame?  Legacy msgpack messages always start with a
     container marker (fixmap/fixarray/map16/array16...), never 0xF0-0xFF,
     so the reserved range is unambiguous."""
     return len(b) >= 5 and b[0] >= WIRE_MAGIC_LO
 
 
-def _head_of(b: bytes) -> Tuple[Dict[str, Any], int]:
+def _head_of(b: Buffer) -> Tuple[Dict[str, Any], int]:
     if b[0] not in (FLAT_MAGIC, BF16_MAGIC, Q8_MAGIC, PARTIAL_MAGIC):
         raise UnsupportedCodec(
             f"unknown wire codec version byte 0x{b[0]:02X}; this build "
@@ -172,7 +179,7 @@ def _head_of(b: bytes) -> Tuple[Dict[str, Any], int]:
     return msgpack.unpackb(memoryview(b)[5:5 + hlen], raw=False), hlen
 
 
-def _unframe(b: bytes, writable: bool = False
+def _unframe(b: Buffer, writable: bool = False
              ) -> Tuple[Dict[str, Any], Optional[object]]:
     """Decode any flat-family frame -> (header, FlatParams | QuantParams).
 
@@ -555,7 +562,11 @@ def encode_task_ins(t: TaskIns) -> bytes:
                           "id": t.task_id, "g": t.group_id}, use_bin_type=True)
 
 
-def decode_task_ins(b: bytes) -> TaskIns:
+def decode_task_ins(b: Buffer) -> TaskIns:
+    """Accepts any buffer (the TCP SuperNode pull path hands a read-only
+    memoryview of the received RES frame straight in — msgpack copies the
+    small envelope, the tensor payload stays a bin that downstream
+    zero-copy decoders wrap without another copy)."""
     d = msgpack.unpackb(b, raw=False)
     return TaskIns(d["t"], d["r"], d["p"], d["id"], d["g"])
 
@@ -565,6 +576,6 @@ def encode_task_res(t: TaskRes) -> bytes:
                           "id": t.task_id, "e": t.error}, use_bin_type=True)
 
 
-def decode_task_res(b: bytes) -> TaskRes:
+def decode_task_res(b: Buffer) -> TaskRes:
     d = msgpack.unpackb(b, raw=False)
     return TaskRes(d["t"], d["r"], d["p"], d["id"], d["e"])

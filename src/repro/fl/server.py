@@ -73,6 +73,15 @@ class ServerConfig:
     async_staleness_exponent: float = 0.5
     async_concurrency: Optional[int] = None
     async_eval_every: int = 1
+    # fleet transport: "inproc" keeps the in-process SuperLink queues;
+    # "tcp" serves the same Fleet API over real sockets
+    # (repro.core.transport.TcpSuperLink) with per-peer credit
+    # backpressure, heartbeats, and reconnect-resume.  The app layer is
+    # identical either way — run_native() reads these to build the link.
+    # bind_port=0 picks an ephemeral port (the link exposes .address).
+    transport: str = "inproc"
+    bind_host: str = "127.0.0.1"
+    bind_port: int = 0
 
 
 class Driver:

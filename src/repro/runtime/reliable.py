@@ -43,6 +43,98 @@ _PENDING = b"\x00__PENDING__"
 _counter = itertools.count()
 
 
+class ResultCache:
+    """Responder-side execute-once dedup (the ReliableMessage receiver
+    role, §4.1(3)), reusable by any transport: :meth:`begin` marks a
+    msg_id before its handler runs, :meth:`finish` caches the result for
+    ``ttl`` seconds so retries — and the socket transport's
+    reconnect-resends — fetch the cached response instead of re-executing
+    a possibly non-idempotent operation.
+
+    Lifecycle per msg_id: unseen -> executing -> done(result, ts) ->
+    result reaped at ``ttl`` (the tiny dedup mark survives 10x longer,
+    so a straggling duplicate is still recognized as seen: the handler
+    never re-executes, the requester just times out — safe) -> unseen.
+    """
+
+    def __init__(self, ttl: float = 60.0,
+                 lock: Optional[threading.Lock] = None):
+        self.ttl = ttl
+        self._lock = lock if lock is not None else threading.Lock()
+        self._seen: Dict[str, float] = {}            # guarded-by: _lock
+        self._executing: set = set()                 # guarded-by: _lock
+        self._results: Dict[str, Tuple[float, object]] = {}  # guarded-by: _lock
+
+    def begin(self, msg_id: str) -> Tuple[str, Optional[object]]:
+        """Claim ``msg_id`` for execution.  Returns one of
+        ``("new", None)`` — caller executes and must :meth:`finish`,
+        :meth:`fail`, or :meth:`forget`; ``("executing", None)`` — the
+        first arrival is still running (its completion will answer);
+        ``("done", result)`` — cached; ``("seen", None)`` — executed but
+        the payload is already reaped (never re-execute)."""
+        with self._lock:
+            if msg_id in self._seen:
+                if msg_id in self._executing:
+                    return "executing", None
+                cached = self._results.get(msg_id)
+                if cached is not None:
+                    return "done", cached[1]
+                return "seen", None
+            # pin the mark while the handler runs: a long-running handler
+            # must not have its dedup mark reaped mid-flight (a retry
+            # would then re-execute)
+            self._seen[msg_id] = time.monotonic()
+            self._executing.add(msg_id)
+            return "new", None
+
+    def finish(self, msg_id: str, result: object) -> None:
+        with self._lock:
+            self._results[msg_id] = (time.monotonic(), result)
+            self._executing.discard(msg_id)
+            self._reap()
+
+    def fail(self, msg_id: str) -> None:
+        """Handler raised: unpin, but keep the dedup mark — retries of a
+        request whose execution blew up mid-flight must not re-execute
+        (the requester times out instead)."""
+        with self._lock:
+            self._executing.discard(msg_id)
+
+    def forget(self, msg_id: str) -> None:
+        """Undo :meth:`begin` entirely (e.g. no handler registered yet):
+        a retry gets to execute from scratch."""
+        with self._lock:
+            self._executing.discard(msg_id)
+            self._seen.pop(msg_id, None)
+
+    def get(self, msg_id: str) -> Optional[object]:
+        """Cached result for a QUERY-style pull, or None."""
+        with self._lock:
+            cached = self._results.get(msg_id)
+            self._reap()
+            return None if cached is None else cached[1]
+
+    def reap(self) -> None:
+        """Idle-tick reap, so an endpoint that goes quiet still releases
+        its cached payloads."""
+        with self._lock:
+            self._reap()
+
+    def _reap(self) -> None:  # guarded-by: _lock
+        """Drop cached result payloads past ``ttl``; keep the (tiny)
+        dedup marks 10x longer.  Caller holds the lock."""
+        now = time.monotonic()
+        cutoff = now - self.ttl
+        for mid in [m for m, (ts, _) in self._results.items()
+                    if ts < cutoff]:
+            del self._results[mid]
+        mark_cutoff = now - 10 * self.ttl
+        for mid in [m for m, ts in self._seen.items()
+                    if ts < mark_cutoff and m not in self._results
+                    and m not in self._executing]:
+            del self._seen[mid]
+
+
 class ReliableMessenger:
     """One per endpoint; handles both the requester and responder roles."""
 
@@ -58,17 +150,26 @@ class ReliableMessenger:
         # reaped so a long-lived endpoint's cache stays bounded
         self.result_ttl = result_ttl
         self.inbox = network.register(me)
-        self._results: Dict[str, Tuple[float, bytes]] = {}   # responder cache
         self._inflight: Dict[str, threading.Event] = {}
         self._responses: Dict[str, bytes] = {}        # requester: msg_id -> resp
-        self._seen: Dict[str, float] = {}             # responder dedup (ts)
-        self._executing: set = set()                  # handlers in flight
         self._handlers: Dict[str, Callable[[Message], bytes]] = {}
         self._lock = threading.Lock()
+        # responder dedup + result cache shares this object's lock, so
+        # holding ``_lock`` snapshots the cache consistently (tests rely
+        # on that) — never call cache methods while already holding it
+        self._cache = ResultCache(result_ttl, lock=self._lock)
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._pump, daemon=True,
                                         name=f"rm-{me}")
         self._thread.start()
+
+    @property
+    def _results(self) -> Dict[str, Tuple[float, object]]:
+        return self._cache._results
+
+    @property
+    def _seen(self) -> Dict[str, float]:
+        return self._cache._seen
 
     def _send(self, msg_id: str, kind: str, receiver: str, topic: str,
               payload: bytes, attempt: int = 0) -> None:
@@ -80,52 +181,26 @@ class ReliableMessenger:
         with self._lock:
             self._handlers[topic] = fn
 
-    def _reap_results(self) -> None:  # guarded-by: _lock
-        """Drop cached result payloads past result_ttl; keep the (tiny)
-        dedup marks 10x longer.  Caller holds the lock.  A duplicate REQ
-        arriving after the payload is reaped but within the mark's
-        lifetime is still recognized as seen — the handler never
-        re-executes, the requester just times out (safe) instead of
-        triggering a second, possibly non-idempotent, execution."""
-        now = time.monotonic()
-        cutoff = now - self.result_ttl
-        for mid in [m for m, (ts, _) in self._results.items() if ts < cutoff]:
-            del self._results[mid]
-        mark_cutoff = now - 10 * self.result_ttl
-        for mid in [m for m, ts in self._seen.items()
-                    if isinstance(ts, float) and ts < mark_cutoff
-                    and m not in self._results
-                    and m not in self._executing]:
-            del self._seen[mid]
-
     def _handle_request(self, msg: Message) -> None:
+        state, cached = self._cache.begin(msg.msg_id)
+        if state != "new":                           # dedup: execute once
+            if state == "done":                      # re-push cached result
+                self._send(msg.msg_id, "RESP", msg.sender, msg.topic,
+                           cached, attempt=msg.attempt)
+            return
         with self._lock:
-            if msg.msg_id in self._seen:            # dedup: execute once
-                cached = self._results.get(msg.msg_id)
-                if cached is not None:              # re-push cached result
-                    self._send(msg.msg_id, "RESP", msg.sender, msg.topic,
-                               cached[1], attempt=msg.attempt)
-                return
             handler = self._match_handler(msg.topic)
-            if handler is None:
-                # no handler *yet* (job process still starting): stay unseen
-                # so a retry executes once the handler is registered
-                return
-            self._seen[msg.msg_id] = time.monotonic()
-            # pin the mark while the handler runs: a long-running handler
-            # must not have its dedup mark reaped mid-flight (a retry REQ
-            # would then re-execute a non-idempotent operation)
-            self._executing.add(msg.msg_id)
+        if handler is None:
+            # no handler *yet* (job process still starting): stay unseen
+            # so a retry executes once the handler is registered
+            self._cache.forget(msg.msg_id)
+            return
         try:
             result = handler(msg)                    # may take a while
         except BaseException:
-            with self._lock:
-                self._executing.discard(msg.msg_id)
+            self._cache.fail(msg.msg_id)
             raise
-        with self._lock:
-            self._results[msg.msg_id] = (time.monotonic(), result)
-            self._executing.discard(msg.msg_id)
-            self._reap_results()
+        self._cache.finish(msg.msg_id, result)
         self._send(msg.msg_id, "RESP", msg.sender, msg.topic, result,
                    attempt=msg.attempt)
 
@@ -138,11 +213,9 @@ class ReliableMessenger:
         return None
 
     def _handle_query(self, msg: Message) -> None:
-        with self._lock:
-            cached = self._results.get(msg.msg_id)
-            self._reap_results()
+        cached = self._cache.get(msg.msg_id)
         self._send(msg.msg_id, "RESP", msg.sender, msg.topic,
-                   cached[1] if cached is not None else _PENDING,
+                   cached if cached is not None else _PENDING,
                    attempt=msg.attempt)
 
     # ------------------------------------------------------------ requester
@@ -198,8 +271,7 @@ class ReliableMessenger:
                 # idle tick: reap even when no requests arrive, so an
                 # endpoint that goes quiet releases its cached payloads
                 if time.monotonic() - last_reap > 1.0:
-                    with self._lock:
-                        self._reap_results()
+                    self._cache.reap()
                     last_reap = time.monotonic()
                 continue
             if msg.kind == "REQ":

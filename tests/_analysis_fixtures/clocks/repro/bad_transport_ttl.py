@@ -1,0 +1,30 @@
+"""Seeded: wall clock driving transport heartbeat expiry and result-cache
+TTL — an NTP step would mass-expire live peers and cached results."""
+import time
+
+
+class PeerState:
+    def __init__(self):
+        self.last_seen = time.time()                # monotonic-clock
+
+    def beat(self):
+        self.last_seen = time.time()                # monotonic-clock
+
+    def silent_for(self) -> float:
+        return time.time() - self.last_seen         # monotonic-clock
+
+
+class ResultCache:
+    TTL = 30.0
+
+    def __init__(self):
+        self._done = {}
+
+    def put(self, msg_id, payload):
+        self._done[msg_id] = (payload, time.time())     # monotonic-clock
+
+    def reap(self):
+        cutoff = time.time() - self.TTL                 # monotonic-clock
+        for mid, (_, ts) in list(self._done.items()):
+            if ts < cutoff:
+                del self._done[mid]

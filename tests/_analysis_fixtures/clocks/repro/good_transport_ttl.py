@@ -1,0 +1,30 @@
+"""Clean twin: heartbeat expiry and result-cache TTL on the monotonic
+clock, immune to wall-clock steps."""
+import time
+
+
+class PeerState:
+    def __init__(self):
+        self.last_seen = time.monotonic()
+
+    def beat(self):
+        self.last_seen = time.monotonic()
+
+    def silent_for(self) -> float:
+        return time.monotonic() - self.last_seen
+
+
+class ResultCache:
+    TTL = 30.0
+
+    def __init__(self):
+        self._done = {}
+
+    def put(self, msg_id, payload):
+        self._done[msg_id] = (payload, time.monotonic())
+
+    def reap(self):
+        cutoff = time.monotonic() - self.TTL
+        for mid, (_, ts) in list(self._done.items()):
+            if ts < cutoff:
+                del self._done[mid]

@@ -1,0 +1,19 @@
+"""Seeded: credit-ledger state debited under the lock but refilled bare —
+a concurrent grant and debit lose credits (or mint them from thin air)."""
+import threading
+
+
+class CreditLedger:
+    def __init__(self, limit: int):
+        self._lock = threading.Lock()
+        self.credits = limit
+
+    def debit(self, n: int) -> bool:
+        with self._lock:
+            if self.credits < n:
+                return False
+            self.credits -= n
+            return True
+
+    def refill(self, n: int):
+        self.credits = self.credits + n

@@ -1,0 +1,26 @@
+"""Clean twin: every credit mutation under the ledger lock, the lock-held
+grant helper only called with the lock taken."""
+import threading
+
+
+class CreditLedger:
+    def __init__(self, limit: int):
+        self._lock = threading.Lock()
+        self.credits = limit      # guarded-by: _lock
+        self._pending = 0         # guarded-by: _lock
+
+    def debit(self, n: int) -> bool:
+        with self._lock:
+            if self.credits < n:
+                return False
+            self.credits -= n
+            return True
+
+    def refill(self, n: int):
+        with self._lock:
+            self._pending += n
+            self._flush()
+
+    def _flush(self):  # guarded-by: _lock
+        self.credits += self._pending
+        self._pending = 0

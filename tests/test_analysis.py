@@ -45,6 +45,7 @@ BAD_CASES = [
     (["locks/bad_guarded.py"], {"guarded-by"}),
     (["locks/bad_guard_annot.py"], {"guarded-by"}),
     (["locks/bad_guard_call.py"], {"guarded-by"}),
+    (["locks/bad_credit_ledger.py"], {"guarded-by"}),
     (["determinism/fl/bad_set_iter.py"], {"det-set-iter"}),
     (["determinism/fl/bad_entropy.py"], {"det-entropy"}),
     (["determinism/kernels/bad_float_accum.py"], {"det-float-accum"}),
@@ -54,6 +55,7 @@ BAD_CASES = [
     (["codec/fl/flat.py", "codec/bad_literal.py"], {"codec-literal"}),
     (["codec/fl/flat.py", "codec/bad_dispatch.py"], {"codec-dispatch"}),
     (["clocks/repro/bad_wallclock.py"], {"monotonic-clock"}),
+    (["clocks/repro/bad_transport_ttl.py"], {"monotonic-clock"}),
     (["deadname/repro/bad_unused.py"], {"dead-name"}),
     (["allows/bad_bare.py"], {"bare-allow", "unknown-rule"}),
     (["parse/bad_syntax.py"], {"parse-error"}),
@@ -62,6 +64,7 @@ BAD_CASES = [
 GOOD_CASES = [
     ["locks/good_lock_order.py"],
     ["locks/good_guarded.py"],
+    ["locks/good_credit_ledger.py"],
     ["determinism/fl/good_set_iter.py"],
     ["determinism/fl/good_entropy.py"],
     ["determinism/kernels/good_float_accum.py"],
@@ -71,6 +74,7 @@ GOOD_CASES = [
     ["codec/fl/flat.py", "codec/good_literal.py"],
     ["codec/fl/flat.py", "codec/good_dispatch.py"],
     ["clocks/repro/good_wallclock.py"],
+    ["clocks/repro/good_transport_ttl.py"],
     ["deadname/repro/good_unused.py"],
     ["allows/good_allow.py"],
 ]

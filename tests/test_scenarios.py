@@ -11,6 +11,7 @@ SuperLink fleet, and asserts:
   else), and quorum knobs abort via ``QuorumNotMet`` when violated;
 - a negotiated lossy codec is reported in ``RoundRecord.metrics``.
 """
+import os
 import threading
 import time
 from contextlib import contextmanager
@@ -71,11 +72,24 @@ class FaultyQuickstart(QuickstartClient):
 @contextmanager
 def quickstart_fleet(fault: str):
     """SuperLink + N quickstart SuperNodes; the last site carries the
-    fault.  Yields (driver, faulted_site_or_None)."""
+    fault.  Yields (driver, faulted_site_or_None).
+
+    ``REPRO_TRANSPORT=tcp`` swaps the in-process connections for a
+    :class:`~repro.core.transport.TcpSuperLink` listener plus one real
+    socket per node — the CI ``tcp-mp`` lane re-runs the scenario grid
+    over it to prove the apps are transport-agnostic."""
+    use_tcp = os.environ.get("REPRO_TRANSPORT") == "tcp"
     sites = [f"site-{i}" for i in range(1, N_SITES + 1)]
     dead_ev = threading.Event() if fault == "dead" else None
     faulted = sites[-1] if fault != "none" else None
-    link = SuperLink()
+    if use_tcp:
+        from repro.core.transport import TcpFleetConnection, TcpSuperLink
+        link = TcpSuperLink("127.0.0.1", 0)
+        host, port = link.address
+        conn_for = lambda s: TcpFleetConnection(host, port, s)  # noqa: E731
+    else:
+        link = SuperLink()
+        conn_for = lambda s: NativeConnection(link)  # noqa: E731
     nodes = []
     for s in sites:
         kw = dict(CLIENT_KW)
@@ -86,7 +100,7 @@ def quickstart_fleet(fault: str):
         client = FaultyQuickstart(s, **kw)
         nodes.append(SuperNode(
             s, ClientApp(lambda cid, c=client: c.to_client()),
-            NativeConnection(link)))
+            conn_for(s)))
     for n in nodes:
         n.start()
     try:
@@ -96,6 +110,8 @@ def quickstart_fleet(fault: str):
             dead_ev.set()
         for n in nodes:
             n.stop()
+        if use_tcp:
+            link.close()
 
 
 def run_scenario(codec: str, strategy: str, fault: str, *, rounds=ROUNDS,
