@@ -34,7 +34,12 @@ when the trajectory regresses:
 - ``async_ttl_*`` rows: presence plus ``async_reached`` / ``ttl_ok``
   (FedBuff reaches the sync run's quickstart loss within the sync
   wall-clock) and ``staleness_ok`` (no fold ever exceeds the staleness
-  bound).
+  bound);
+- ``sparse_delta_*`` rows: presence plus ``wire_lt_1pct`` (a 0xF5
+  TopK-delta uplink at the configured fraction stays under 1% of the
+  dense fp32 frame — on the synthetic 32B-param geometry this is the
+  headline federated-LLM wire-cost claim) and ``match_tol`` (the
+  scatter fold reconstructs within the int8 bound).
 
 Timing rows that legitimately vary run to run (round wall-clock, straggler
 ratios) are NOT gated — only throughput/speedup of the aggregation engine
@@ -60,7 +65,7 @@ from typing import Dict, List
 #: convergence checks below)
 GATED_PREFIXES = ("agg_throughput_", "quantized_agg_", "pallas_agg_",
                   "wire_bytes_", "wire_codec_convergence", "shard_agg_",
-                  "hier_agg_", "async_ttl_", "tcp_round_")
+                  "hier_agg_", "async_ttl_", "tcp_round_", "sparse_delta_")
 #: higher-is-better derived fields compared under the threshold
 GATED_FIELDS = ("mbps", "speedup_vs_legacy", "overlap_speedup")
 #: boolean derived fields that must hold wherever they appear
@@ -70,7 +75,7 @@ GATED_FIELDS = ("mbps", "speedup_vs_legacy", "overlap_speedup")
 INVARIANT_FLAGS = ("match", "match_tol", "bitwise_match", "within_tol",
                    "q8_match", "shard_mem_ok", "root_payloads_ok",
                    "delivered_ok", "async_reached", "staleness_ok",
-                   "ttl_ok", "backpressure_ok")
+                   "ttl_ok", "backpressure_ok", "wire_lt_1pct")
 #: wire_bytes_* rows must keep at least this payload reduction vs fp32
 MIN_WIRE_REDUCTION = 3.5
 #: shard_agg_* rows must keep at least this speedup over the legacy

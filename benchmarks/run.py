@@ -39,6 +39,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                          the fused int8-delta path's q8_match on the
                          small rows)
   wire_codec_convergence negotiated q8 vs flat on the quickstart task
+  sparse_delta_*         structured-sparse 0xF5 TopK-delta uplinks: wire
+                         bytes vs the dense fp32 frame (the <1% claim,
+                         priced analytically on the 32B-param qwen3-32b
+                         geometry and measured end-to-end on a real
+                         payload) + the fused scatter-dequantize-
+                         accumulate fold within the int8 bound
   shard_agg_*            mesh-sharded server aggregation state: q8-delta
                          round folded through per-shard accumulators with
                          the base deferred to finalize, vs the legacy
@@ -626,6 +632,125 @@ def bench_wire_convergence(quick=False):
           f"within_tol={abs(l32 - l8) < 0.05}")
 
 
+def _sparse_delta_case(label, n_params, n_clients, frac):
+    """Structured-sparse 0xF5 TopK-delta round vs the dense fp32 round:
+    uplink wire bytes plus the fused scatter-dequantize-accumulate fold,
+    checked against a dense fold of the SAME masked update within the
+    analytic int8 bound (both rounds travel identical coordinate sets —
+    ``topk_indices`` is deterministic — so the residual is quantization,
+    not truncation)."""
+    import gc
+
+    from repro.fl.flat import FlatParams, topk_indices
+    from repro.fl.messages import FitRes, decode_fit_res, encode_fit_res
+    from repro.fl.strategy import make_strategy
+
+    nleaves = max(1, n_params // _LEAF)
+    rng = np.random.default_rng(13)
+    model = [rng.normal(0, 0.5, (_LEAF,)).astype(np.float32)
+             for _ in range(nleaves)]
+    result = [m + rng.normal(0, 1e-3, (_LEAF,)).astype(np.float32)
+              for m in model]
+    weights = [10 + i for i in range(n_clients)]
+    base = FlatParams.from_arrays(model)
+    total = base.layout.total_size
+
+    # the coordinate set the encoder will pick: same selection function
+    # on the same fp32 quantity (result - base), same k rounding
+    mag = np.abs(np.concatenate(result) - np.concatenate(model))
+    idx = topk_indices(mag, max(1, int(np.ceil(frac * total))))
+    del mag
+    keep = np.zeros(total, bool)
+    keep[idx] = True
+    masked = [np.where(keep[i * _LEAF:(i + 1) * _LEAF], r, m)
+              for i, (m, r) in enumerate(zip(model, result))]
+
+    # dense fp32 reference round over the masked update
+    up32 = encode_fit_res(FitRes(masked, 0, {}), codec="flat")
+    strat = make_strategy("fedavg")
+    acc = strat.fit_accumulator(1, model)
+    for c in range(n_clients):
+        r = decode_fit_res(up32)
+        r.num_examples = weights[c]
+        acc.add(f"site-{c}", r)
+    out32, _ = acc.finalize([])
+    fp32_bytes = len(up32)
+    del up32, masked
+    gc.collect()
+
+    # sparse round: same full result, the encoder's TopK keeps `idx`
+    t0 = time.perf_counter()
+    up_sp = encode_fit_res(FitRes(result, 0, {}), codec="sparse",
+                           base=base, sparse_frac=frac)
+    t_enc = time.perf_counter() - t0
+    del result
+    gc.collect()
+
+    acc = strat.fit_accumulator(1, model)
+    t0 = time.perf_counter()
+    for c in range(n_clients):
+        r = decode_fit_res(up_sp)
+        r.num_examples = weights[c]
+        r.sparse.base = base
+        acc.add(f"site-{c}", r)
+    out_sp, _ = acc.finalize([])
+    t_fold = time.perf_counter() - t0
+
+    sp = decode_fit_res(up_sp).sparse
+    tol = 0.5 * float(sp.scales.max()) * (1 + 1e-5) + 1e-6
+    err = max(float(np.abs(a.astype(np.float64)
+                           - b.astype(np.float64)).max())
+              for a, b in zip(out32, out_sp))
+    ratio = len(up_sp) / fp32_bytes
+    print(f"sparse_delta_{label}_wire,{(t_enc + t_fold) * 1e6:.0f},"
+          f"fp32_mb={fp32_bytes / 1e6:.1f};sparse_mb={len(up_sp) / 1e6:.2f};"
+          f"frac={frac};wire_pct={100 * ratio:.3f};"
+          f"wire_lt_1pct={ratio < 0.01};nnz={sp.nnz};"
+          f"fold_mbps={n_params * 4 * n_clients / t_fold / 1e6:.0f};"
+          f"max_err={err:.2e};match_tol={err <= tol}")
+
+
+def bench_sparse_delta(quick=False):
+    """0xF5 structured-sparse delta codec: the federated-LLM wire-cost
+    claim.  ``sparse_delta_32b_cfg_wire`` prices a TopK uplink for the
+    registry qwen3-32b geometry analytically off the abstract layout (no
+    32B-param allocation — index/value/scale stream widths are fixed by
+    the frame format); ``sparse_delta_100m_wire`` runs the real
+    encode + scatter fold on an allocated payload."""
+    import math
+
+    import jax
+
+    from repro.config import get_model_config
+    from repro.fl.flat import QCHUNK
+    from repro.models import build_model
+
+    frac = 1e-3
+    t0 = time.perf_counter()
+    leaves = jax.tree.leaves(build_model(
+        get_model_config("qwen3-32b")).abstract())
+    total = sum(int(np.prod(l.shape)) for l in leaves)
+    us = (time.perf_counter() - t0) * 1e6
+    nnz = int(total * frac)
+    # payload streams: fp32 dense vs int64 indices + int8 values +
+    # fp32 per-QCHUNK scales (the msgpack layout header is shared by
+    # both frames and vanishes at this scale)
+    fp32_bytes = total * 4
+    sparse_bytes = nnz * 8 + nnz * 1 + 4 * math.ceil(nnz / QCHUNK)
+    ratio = sparse_bytes / fp32_bytes
+    print(f"sparse_delta_32b_cfg_wire,{max(us, 1):.0f},"
+          f"params_b={total / 1e9:.1f};fp32_gb={fp32_bytes / 1e9:.1f};"
+          f"sparse_mb={sparse_bytes / 1e6:.0f};frac={frac};"
+          f"wire_pct={100 * ratio:.3f};wire_lt_1pct={ratio < 0.01}")
+
+    n_params = 20_000_000 if quick else 100_000_000
+    label = "100m"                      # row name is baseline-stable
+    try:
+        _sparse_delta_case(label, n_params, 8, frac)
+    except MemoryError:
+        print(f"sparse_delta_{label}_wire,0,skipped=oom")
+
+
 def _straggler_case(n_clients, delta, timeout, dead=False, rounds=2):
     """Round wall-clock with one straggler (delayed by ``delta``) or one
     dead node among ``n_clients``, through the arrival-order streaming
@@ -1138,6 +1263,7 @@ def main() -> None:
         ("shard_agg", bench_shard_agg),
         ("wire_codecs", bench_wire_codecs),
         ("wire_convergence", bench_wire_convergence),
+        ("sparse_delta", bench_sparse_delta),
         ("straggler_overlap", bench_straggler_overlap),
         ("hier_agg", bench_hier_agg),
         ("async_ttl", bench_async_ttl),

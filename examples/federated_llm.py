@@ -2,13 +2,30 @@
 LM across sites through the FLARE runtime.
 
 Each site holds a non-IID synthetic corpus (its own Markov chain); clients
-run real jitted train steps on the registry transformer; the server
-aggregates with FedAvg through the six-hop bridged path.  At --scale full
-the model is ~100M params and runs a few hundred local steps total; the
-default is laptop-sized so the example finishes in ~a minute on 1 CPU.
+run real jitted, mesh-sharded train steps on the registry transformer
+(fsdp "data"/"model" axes via ``launch.mesh.make_local_mesh`` — a (1,1)
+mesh on a laptop, the same code path as a production mesh); the server
+aggregates with FedAvg through the six-hop bridged path, and fit results
+ship as structured-sparse 0xF5 TopK deltas by default (<<1% of the
+full-weight wire bytes at --scale full).  At --scale full the model is
+~100M params and runs a few hundred local steps total; the default is
+laptop-sized so the example finishes in ~a minute on 1 CPU.
 
     PYTHONPATH=src python examples/federated_llm.py            # small
     PYTHONPATH=src python examples/federated_llm.py --scale full
+    PYTHONPATH=src python examples/federated_llm.py --codec q8  # int8 wire
+
+Two properties this file is careful about (pinned by
+tests/test_federated_llm.py):
+
+- the local optimizer state PERSISTS across rounds: ``fit`` replaces only
+  the params in the running ``TrainState``, so Adam moments and the LR
+  schedule's step counter stay continuous (re-initializing the moments
+  every round while the step counter advanced silently destroyed the
+  schedule/moment pairing);
+- the compiled step is SHARED: every client with the same
+  ``(cfg, tcfg, mesh)`` gets one jitted step from
+  ``train.steps.get_train_step`` instead of tracing per client.
 """
 import argparse
 
@@ -22,9 +39,11 @@ from repro.data.loader import FederatedDataLoader
 from repro.fl import FedAvg, ServerApp, ServerConfig
 from repro.fl.client import ClientApp, NumPyClient
 from repro.fl.messages import arrays_to_params, params_to_arrays
+from repro.launch.mesh import make_local_mesh
 from repro.models import build_model
 from repro.runtime import FlareRuntime
-from repro.train.steps import cross_entropy_loss, make_train_step
+from repro.train.steps import (TrainState, cross_entropy_loss,
+                               get_train_step)
 
 SITES = ["site-1", "site-2", "site-3", "site-4"]
 
@@ -32,36 +51,43 @@ SITES = ["site-1", "site-2", "site-3", "site-4"]
 class LMClient(NumPyClient):
     """A real JAX training client: local steps on the site's own corpus."""
 
-    def __init__(self, site: str, cfg, tcfg, loader, local_steps: int):
+    def __init__(self, site: str, cfg, tcfg, loader, local_steps: int,
+                 mesh=None):
         self.site = site
         self.site_idx = int(site.rsplit("-", 1)[-1]) - 1
         self.model = build_model(cfg)
         self.tcfg = tcfg
         self.loader = loader
         self.local_steps = local_steps
-        self._step_fn = jax.jit(make_train_step(self.model, tcfg))
+        self.mesh = mesh if mesh is not None else make_local_mesh()
+        # one compiled mesh-sharded step per (cfg, tcfg, mesh) in the
+        # whole process — sites share it
+        self._step_fn = get_train_step(cfg, tcfg, mesh=self.mesh)
         self._like = self.model.init(jax.random.key(0))
         from repro.optim import make_optimizer
 
         self._opt = make_optimizer(tcfg)
+        # persistent local TrainState: moments + step survive across
+        # rounds; fit() only swaps in the aggregated params
+        self._state = None
 
     def get_parameters(self, config):
         return params_to_arrays(self._like)
 
     def fit(self, parameters, config):
-        from repro.train.steps import TrainState
-
         params = arrays_to_params(parameters, self._like)
-        state = TrainState(params, self._opt.init(params),
-                           jnp.asarray(int(config.get("round", 0))
-                                       * self.local_steps, jnp.int32))
+        if self._state is None:
+            self._state = TrainState(params, self._opt.init(params),
+                                     jnp.zeros((), jnp.int32))
+        else:
+            self._state = self._state._replace(params=params)
         losses = []
         for _ in range(self.local_steps):
             batch = self.loader.next_batch(self.site_idx)
-            state, m = self._step_fn(state, batch)
+            self._state, m = self._step_fn(self._state, batch)
             losses.append(float(m["loss"]))
         n = self.local_steps * self.tcfg.global_batch * self.tcfg.seq_len
-        return (params_to_arrays(state.params), n,
+        return (params_to_arrays(self._state.params), n,
                 {"train_loss": float(np.mean(losses))})
 
     def evaluate(self, parameters, config):
@@ -76,6 +102,12 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=["small", "full"], default="small")
     ap.add_argument("--rounds", type=int, default=0)
+    ap.add_argument("--codec", choices=["flat", "bf16", "q8", "sparse"],
+                    default="sparse",
+                    help="negotiated uplink codec (default: 0xF5 "
+                         "structured-sparse TopK deltas)")
+    ap.add_argument("--sparse-frac", type=float, default=0.05,
+                    help="TopK fraction for --codec sparse")
     args = ap.parse_args()
 
     base = get_model_config("flower-quickstart")
@@ -93,8 +125,11 @@ def main():
         rounds, local_steps = args.rounds or 3, 10
 
     model = build_model(cfg)
+    mesh = make_local_mesh()
     print(f"federated LM: {model.param_count()/1e6:.1f}M params, "
-          f"{len(SITES)} sites, {rounds} rounds x {local_steps} local steps")
+          f"{len(SITES)} sites, {rounds} rounds x {local_steps} local "
+          f"steps, mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
+          f"codec {args.codec}")
 
     loader = FederatedDataLoader(cfg.vocab_size, tcfg.seq_len,
                                  num_sites=len(SITES),
@@ -103,23 +138,32 @@ def main():
 
     def client_app_fn(site):
         return ClientApp(client_fn=lambda cid: LMClient(
-            site, cfg, tcfg, loader, local_steps).to_client())
+            site, cfg, tcfg, loader, local_steps, mesh=mesh).to_client())
 
     rt = FlareRuntime(request_timeout=600.0)
     for s in SITES:
         rt.provision_site(s)
-    server = ServerApp(config=ServerConfig(num_rounds=rounds,
-                                           round_timeout=3600),
-                       strategy=FedAvg())
+    server = ServerApp(
+        config=ServerConfig(
+            num_rounds=rounds, round_timeout=3600,
+            codec=None if args.codec == "flat" else args.codec,
+            sparse_frac=args.sparse_frac),
+        strategy=FedAvg())
     history = run_in_flare(rt, server, client_app_fn, SITES, timeout=7200)
     rt.shutdown()
 
     print("\nper-round federated eval loss:")
-    for rnd, loss in history.losses():
-        print(f"  round {rnd}: {loss:.4f}")
+    for rec in history.rounds:
+        extra = ""
+        if "wire_codec" in rec.metrics:
+            extra = f"  [wire={rec.metrics['wire_codec']}]"
+        if rec.loss is not None:
+            print(f"  round {rec.round}: {rec.loss:.4f}{extra}")
     first, last = history.losses()[0][1], history.losses()[-1][1]
     print(f"\nloss {first:.4f} -> {last:.4f} "
           f"({'improved' if last < first else 'NOT improved'})")
+    if last >= first:
+        raise SystemExit("federated loss did not improve")
 
 
 if __name__ == "__main__":

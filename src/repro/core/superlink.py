@@ -657,6 +657,13 @@ class EdgeAggregatorApp:
                     # child trained from — same base the root would use
                     base = peek_params(task.payload)
                 q.base = base
+            sp = res.sparse
+            if sp is not None and sp.base is None:
+                if base is None:
+                    base = peek_params(task.payload)
+                # the deferred base lands in raw_sum()/finalize(), so the
+                # 0xF4 partial this edge frames stays the true subtree sum
+                sp.base = base
             fp = _flat_of(res)
             if acc is None:
                 acc = kernels.StreamingWeightedSum(fp.layout)

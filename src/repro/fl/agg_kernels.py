@@ -433,6 +433,10 @@ class StreamingWeightedSum:
         # legacy-mode padded device accumulator (geometry-keyed cache)
         self._acc_padded = None
         self._pad_geom: Optional[Tuple[int, int]] = None
+        # deferred delta bases: token -> [base object, summed weight].
+        # Sharded dense deltas and sparse deltas (both modes) fold
+        # base-deferred: sum_k w_k (d_k + b) == sum_k w_k d_k + W b
+        self._deferred: Dict[str, list] = {}
         if self.shards:
             from repro.fl.flat import QCHUNK
             from repro.sharding import shard_bounds
@@ -444,8 +448,6 @@ class StreamingWeightedSum:
             self._spad: List[Any] = [None] * self.shards
             self._sgeom: List[Optional[Tuple[int, int]]] = \
                 [None] * self.shards
-            # deferred delta bases: token -> [base object, summed weight]
-            self._deferred: Dict[str, list] = {}
             self._devices = (list(mesh.devices.flat)
                              if mesh is not None else None)
             use_pipe = (self.backend == "numpy" and layout.total_size > 0
@@ -460,6 +462,12 @@ class StreamingWeightedSum:
 
     # ------------------------------------------------------------ shared
     def add(self, fp: FlatParams, w: float) -> None:
+        if getattr(fp, "is_sparse", False):
+            # 0xF5 structured-sparse delta: O(nnz) scatter fold — routed
+            # here so edge pre-reduce and FedBuff call sites fold sparse
+            # payloads without knowing about them
+            self.add_sparse(fp, w)
+            return
         if self.shards:
             self._add_sharded(fp, w)
             self.total_w += float(w)
@@ -517,24 +525,101 @@ class StreamingWeightedSum:
         self.total_w += float(scale) * float(ps.total_w)
         self.count += int(ps.count)
 
+    def add_sparse(self, sp, w: float) -> None:
+        """Fold a structured-sparse delta (0xF5,
+        :class:`~repro.fl.flat.SparseDelta`): ``acc[traveled] += w *
+        dequant(values)`` — O(nnz) per arrival, never a model-size
+        densify.  The round base is **deferred** (recorded at its summed
+        weight and applied chunk-streamed at :meth:`finalize` /
+        :meth:`raw_sum`), exactly like the sharded dense-delta fold.  On
+        the Pallas backend the dequantize+scale chain runs as a jitted
+        device graph (``kernels.agg_reduce.scatter_wsum``, bitwise the
+        numpy chain); the scatter-add itself stays host-side — unique
+        indices, so there is no reduction-order ambiguity."""
+        self._record_base(sp, w)
+        sw = np.float64(w)
+        if self.shards:
+            if self._pipe is not None:
+                # keep the (arrival, shard) fold order serial: queued
+                # dense decodes fold before this sparse arrival
+                self._pipe.drain(self._fold_item)
+            for si, (lo, hi) in enumerate(self._bounds):
+                if hi <= lo:
+                    continue
+                self._scatter_spans(sp, lo, hi, self._shard_acc(si), sw)
+        else:
+            self._scatter_spans(sp, 0, self.layout.total_size,
+                                self._acc_vec(), sw)
+        self.total_w += float(w)
+        self.count += 1
+
+    def _scatter_spans(self, sp, lo: int, hi: int, acc: np.ndarray,
+                       sw: np.float64) -> None:
+        """Scatter ``sp``'s traveled coordinates inside [lo, hi) into
+        ``acc`` (indexed relative to ``lo``), sub-chunked to the scratch
+        size so a whole-model adapter range never allocates O(range)."""
+        use_dev = self.backend == "pallas" and self.layout.total_size
+        if use_dev:
+            from repro.kernels import agg_reduce
+        for p0, p1, dest in sp.iter_spans(lo, hi):
+            for q0 in range(p0, p1, CHUNK):
+                q1 = min(q0 + CHUNK, p1)
+                if isinstance(dest, slice):
+                    d = slice(dest.start + (q0 - p0),
+                              dest.start + (q1 - p0))
+                else:
+                    d = dest[q0 - p0:q1 - p0]
+                if use_dev:
+                    agg_reduce.scatter_wsum(
+                        acc, d, sp.values[q0:q1], float(sw),
+                        scales=sp.scales, qchunk=sp.qchunk, pos0=q0)
+                else:
+                    buf = sp.dequant_packed(q0, q1, self._tmp)
+                    np.multiply(buf, sw, out=self._scratch[:q1 - q0])
+                    acc[d] += self._scratch[:q1 - q0]
+
+    def _apply_deferred(self, acc: np.ndarray, denom: float) -> None:
+        """Add every deferred round base at ``summed_weight / denom``,
+        chunk-streamed in canonical token order (arrival-order
+        invariant; no model-size fp64 base materializes)."""
+        if not self._deferred:
+            return
+        defs = [(self._deferred[tok][0],
+                 np.float64(self._deferred[tok][1] / denom))
+                for tok in sorted(self._deferred)]
+        n = acc.size
+        for lo in range(0, n, CHUNK):
+            hi = min(lo + CHUNK, n)
+            for bobj, bw in defs:
+                x = bobj.f64_chunk(lo, hi, self._tmp)
+                np.multiply(x, bw, out=self._scratch[:hi - lo])
+                acc[lo:hi] += self._scratch[:hi - lo]
+        self._deferred.clear()
+
     def raw_sum(self) -> np.ndarray:
         """The unscaled fp64 accumulator ``sum_i w_i x_i`` — what an edge
         aggregator frames as a 0xF4 partial payload instead of calling
         :meth:`finalize`.  Ends the fold: the returned vector IS the
         accumulator (no copy), so neither :meth:`add` nor
         :meth:`finalize` may be called afterwards.  Single-host mode
-        only (edges pre-reduce locally; sharding is root-side state)."""
+        only (edges pre-reduce locally; sharding is root-side state).
+        Deferred sparse-delta bases are applied here at their SUMMED
+        weight (S_e = sum w·d + W_b·b), so the 0xF4 partial an edge
+        frames from sparse arrivals is the true subtree sum."""
         if self.shards:
             raise ValueError(
                 "raw_sum() is single-host only: edge pre-reduction keeps "
                 "one local accumulator, sharded state is for the root")
-        return self._acc_vec()
+        acc = self._acc_vec()
+        self._apply_deferred(acc, 1.0)
+        return acc
 
     def finalize(self) -> FlatParams:
         if self.shards:
             return self._finalize_sharded()
         acc = self._acc_vec()
         acc *= np.float64(1.0 / self.total_w)
+        self._apply_deferred(acc, self.total_w)
         out = FlatParams.zeros(self.layout)
         _scatter_leaves(acc, self.layout, out)
         return out
@@ -611,7 +696,8 @@ class StreamingWeightedSum:
         if base is None:
             raise ValueError(
                 "delta-encoded payload needs its round base attached "
-                "(QuantParams.base) before it can be read")
+                "(QuantParams.base / SparseDelta.base) before it can "
+                "be folded")
         tok = memo_token(base)
         ent = self._deferred.get(tok)
         if ent is None:

@@ -48,6 +48,15 @@ class NumPyClient:
             ) -> Tuple[NDArrays, int, Dict[str, Any]]:
         raise NotImplementedError
 
+    def trainable_ranges(self) -> Optional[Sequence[Tuple[int, int]]]:
+        """Adapter/LoRA mode for the negotiated ``sparse`` codec: sorted,
+        non-overlapping ``[start, stop)`` element ranges into the flat
+        fp32 math vector that this client actually trains.  When set,
+        a sparse fit result ships ONLY those coordinate ranges (0xF5
+        ranges mode) instead of the TopK of the delta.  ``None`` (the
+        default) means every coordinate is trainable — TopK mode."""
+        return None
+
     def evaluate(self, parameters: NDArrays, config: Dict[str, Any]
                  ) -> Tuple[float, int, Dict[str, Any]]:
         raise NotImplementedError
@@ -103,19 +112,27 @@ class ClientApp:
                 if t.task_type == "fit":
                     ins = decode_fit_ins(t.payload)
                     codec = ins.config.get("codec")
-                    if codec in QUANT_CODECS and ins.flat is not None \
+                    lossy = codec in QUANT_CODECS or codec == "sparse"
+                    if lossy and ins.flat is not None \
                             and len(t.payload) \
                             and t.payload[0] in (BF16_MAGIC, Q8_MAGIC):
                         # copy BEFORE fit() may mutate the views in place
                         stash["base"] = FlatParams(ins.flat.buf.copy(),
                                                    ins.flat.layout)
                         stash["base_payload"] = t.payload
+                    if codec == "sparse":
+                        # adapter/LoRA mask, read once per handle so the
+                        # mod-chain re-encode sees the same subset
+                        stash["ranges"] = client.np_client \
+                            .trainable_ranges()
+                        stash["frac"] = ins.config.get("sparse_frac",
+                                                       0.01)
                     res = client.handle_fit(ins)
                     enc_codec = enc_base = None
-                    if not self.mods and codec in QUANT_CODECS:
+                    if not self.mods and lossy:
                         # no mod chain to feed: skip the intermediate
-                        # lossless frame and quantize directly (the
-                        # encoder still falls back to 0xF1 when the
+                        # lossless frame and encode compressed directly
+                        # (the encoder still falls back to 0xF1 when the
                         # result is not uniform fp32)
                         base = stash.get("base")
                         if base is None:            # raw 0xF1 downlink
@@ -125,8 +142,11 @@ class ClientApp:
                         if base is not None:        # delta-encodable only
                             enc_codec, enc_base = codec, base
                     return TaskRes("fit", t.round,
-                                   encode_fit_res(res, codec=enc_codec,
-                                                  base=enc_base),
+                                   encode_fit_res(
+                                       res, codec=enc_codec, base=enc_base,
+                                       sparse_frac=stash.get("frac", 0.01),
+                                       sparse_ranges=_valid_ranges(
+                                           stash.get("ranges"), enc_base)),
                                    task_id=t.task_id)
                 if t.task_type == "evaluate":
                     res = client.handle_evaluate(decode_evaluate_ins(t.payload))
@@ -169,9 +189,12 @@ class ClientApp:
         integer-domain sum) skip compression via the encoder's lossless
         0xF1 fallback — which the header pre-check below shortcuts."""
         codec = None
+        cfg: Dict[str, Any] = {}
         if task.task_type == "fit" and not res.error and res.payload:
-            codec = peek_config(task.payload).get("codec")
-        if codec not in QUANT_CODECS or res.payload[0] != FLAT_MAGIC:
+            cfg = peek_config(task.payload)
+            codec = cfg.get("codec")
+        if (codec not in QUANT_CODECS and codec != "sparse") \
+                or res.payload[0] != FLAT_MAGIC:
             return res                  # nothing requested, or non-flat out
         fit = decode_fit_res(res.payload)          # zero-copy (0xF1)
         if not quantizable(fit.flat.layout):
@@ -186,9 +209,33 @@ class ClientApp:
             base = None                 # result re-shaped: no delta possible
         if base is None:
             return res                  # keep lossless rather than quantize
-        payload = encode_fit_res(fit, codec=codec, base=base)
+        payload = encode_fit_res(
+            fit, codec=codec, base=base,
+            sparse_frac=(stash or {}).get("frac",
+                                          cfg.get("sparse_frac", 0.01)),
+            sparse_ranges=_valid_ranges((stash or {}).get("ranges"), base))
         return TaskRes(res.task_type, res.round, payload,
                        task_id=res.task_id)
+
+
+def _valid_ranges(ranges, base: Optional[FlatParams]):
+    """Sanitize a client's adapter mask: sorted, non-overlapping
+    ``[start, stop)`` int64 ranges inside the base layout, or ``None``
+    (falls back to TopK mode) when the mask is absent or malformed —
+    better a denser-than-asked update than a byzantine rejection."""
+    if ranges is None or base is None:
+        return None
+    try:
+        r = np.asarray(ranges, np.int64).reshape(-1, 2)
+    except (TypeError, ValueError):
+        return None
+    if r.size == 0:
+        return None
+    if bool((r[:, 0] >= r[:, 1]).any()) or int(r[0, 0]) < 0 \
+            or int(r[-1, 1]) > base.layout.total_size \
+            or bool((r[1:, 0] < r[:-1, 1]).any()):
+        return None
+    return r
 
 
 def _bind_mod(mod: ModFn, nxt: Callable[[TaskIns], TaskRes]):

@@ -50,11 +50,12 @@ WIRE_MAGICS: Dict[str, int] = {
     "bf16": 0xF2,          # bfloat16 payload
     "q8": 0xF3,            # int8 + per-chunk fp32 scales
     "partial": 0xF4,       # edge-aggregator partial sum (fp64 Σw·x + W)
+    "sparse": 0xF5,        # structured-sparse delta (index + value streams)
     "metric_batch": 0xFB,  # runtime/streaming.py metric event batches
 }
 #: the subset that frames *model payloads*: a decoder dispatching on
 #: these must cover all of them or raise UnsupportedCodec on the rest
-PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8", "partial")
+PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8", "partial", "sparse")
 
 # process-unique memo-token counter (see memo_token)
 _MEMO_COUNTER = itertools.count(1)
@@ -607,3 +608,220 @@ class PartialSum:
 
     def nbytes(self) -> int:
         return int(self.data.nbytes)
+
+
+# ---------------------------------------------------------------------------
+# structured-sparse delta payloads (wire codec 0xF5 — TopK / adapter mode)
+# ---------------------------------------------------------------------------
+def topk_indices(mag: np.ndarray, k: int) -> np.ndarray:
+    """Exactly-k largest-|magnitude| indices with deterministic
+    tie-breaking, returned **sorted ascending**.
+
+    ``np.argpartition`` orders equal-magnitude elements by memory layout,
+    which varies across numpy builds; selecting ``mag >= thresh`` instead
+    keeps *every* tie and overshoots k.  This helper takes all elements
+    strictly above the k-th magnitude, then fills the remaining slots with
+    the **lowest-index** elements equal to it — exactly k indices, bitwise
+    reproducible across runs and platforms.  Shared by the 0xF5 encoder
+    and :class:`repro.fl.mods.TopKCompressionMod`.
+    """
+    mag = np.ravel(mag)
+    k = int(k)
+    if k <= 0:
+        return np.empty(0, np.int64)
+    if k >= mag.size:
+        return np.arange(mag.size, dtype=np.int64)
+    thresh = np.partition(mag, mag.size - k)[mag.size - k]
+    above = np.flatnonzero(mag > thresh)
+    need = k - above.size
+    ties = np.flatnonzero(mag == thresh)[:need]
+    return np.sort(np.concatenate((above, ties))).astype(np.int64)
+
+
+class SparseDelta:
+    """Zero-copy view of a structured-sparse delta payload (codec 0xF5).
+
+    The logical model is the uniform-fp32 :class:`Layout`; the payload is
+    **always a delta** vs the round-start parameters (untraveled
+    coordinates mean "delta == 0", so the server reconstructs
+    ``base + scatter(values at indices)``).  Two index modes:
+
+    - ``imode="coo"``: ``indices`` is a sorted, unique ``(nnz,)`` int64
+      vector of element coordinates (TopK-sparse client updates);
+    - ``imode="ranges"``: ``indices`` is a sorted, non-overlapping
+      ``(R, 2)`` int64 array of ``[start, stop)`` element ranges — the
+      adapter/LoRA-mask mode where only the trainable subset travels and
+      ``values`` is the dense concatenation of those ranges.
+
+    Two value modes: ``vmode="q8"`` reuses the PR 3 int8 machinery —
+    ``values`` is int8 and ``scales`` one fp32 scale per
+    :data:`QCHUNK`-element window **of the packed value stream** (error
+    per traveled coordinate bounded by ``scale/2``) — and ``vmode="f32"``
+    carries raw fp32 values (lossless given the selection).
+
+    Implements the chunked-read protocol (``layout`` / :meth:`f64_chunk`
+    / :meth:`decode_chunk` / :meth:`nbytes`) so the generic kernels can
+    stream it; the aggregation fold uses :meth:`iter_spans` +
+    :meth:`dequant_packed` instead for an O(nnz) fused
+    scatter-dequantize-accumulate that never densifies
+    (:meth:`StreamingWeightedSum.add_sparse <repro.fl.agg_kernels
+    .StreamingWeightedSum.add_sparse>`).  :meth:`tile_source` returns
+    ``None`` by design — a data-dependent scatter has no tile structure
+    for the stacked Pallas kernels, so the dispatch layer's numpy/scatter
+    fallback is the device path (see ``kernels.agg_reduce.scatter_wsum``).
+    """
+
+    is_delta = True      # always encoded vs the round-start parameters
+    is_sparse = True
+
+    __slots__ = ("layout", "imode", "vmode", "indices", "values", "scales",
+                 "qchunk", "base", "_starts", "_stops", "_offsets",
+                 "_memo_token")
+
+    def __init__(self, layout: Layout, imode: str, indices: np.ndarray,
+                 values: np.ndarray, scales: Optional[np.ndarray] = None,
+                 qchunk: int = QCHUNK, base=None):
+        assert imode in ("coo", "ranges"), imode
+        self.layout = layout
+        self.imode = imode
+        self.indices = indices
+        self.values = values
+        self.scales = scales
+        self.qchunk = int(qchunk)
+        self.base = base
+        self.vmode = "q8" if values.dtype == np.int8 else "f32"
+        n = layout.total_size
+        # validate the index structure up front: a byzantine payload with
+        # unsorted/overlapping coordinates would silently break the
+        # searchsorted windowing and the unique-scatter determinism — the
+        # ValueError here demotes the sender to a per-node failure instead
+        if imode == "coo":
+            if indices.ndim != 1 or indices.size != values.size:
+                raise ValueError("coo sparse delta: indices/values mismatch")
+            if indices.size and (int(indices[0]) < 0
+                                 or int(indices[-1]) >= n
+                                 or np.any(np.diff(indices) <= 0)):
+                raise ValueError(
+                    "coo sparse delta: indices must be sorted, unique and "
+                    "within the layout")
+            self._starts = self._stops = self._offsets = None
+        else:
+            r = indices.reshape(-1, 2)
+            if np.any(r[:, 0] >= r[:, 1]) or (r.size and (
+                    int(r[0, 0]) < 0 or int(r[-1, 1]) > n
+                    or np.any(r[1:, 0] < r[:-1, 1]))):
+                raise ValueError(
+                    "ranges sparse delta: [start, stop) ranges must be "
+                    "sorted, non-overlapping and within the layout")
+            lens = (r[:, 1] - r[:, 0]).astype(np.int64)
+            if int(lens.sum()) != values.size:
+                raise ValueError("ranges sparse delta: values length != "
+                                 "total range coverage")
+            self._starts = np.ascontiguousarray(r[:, 0])
+            self._stops = np.ascontiguousarray(r[:, 1])
+            off = np.zeros(len(r) + 1, np.int64)
+            np.cumsum(lens, out=off[1:])
+            self._offsets = off
+        if self.vmode == "q8":
+            nchunks = -(-values.size // self.qchunk)
+            if scales is None or scales.size != nchunks:
+                raise ValueError("q8 sparse delta: need one fp32 scale per "
+                                 "qchunk window of the packed value stream")
+        self._memo_token: Optional[str] = None
+
+    @property
+    def nnz(self) -> int:
+        return int(self.values.size)
+
+    # ------------------------------------------------------- O(nnz) access
+    def iter_spans(self, lo: int, hi: int):
+        """Yield ``(p0, p1, dest)`` for the traveled coordinates inside
+        element window ``[lo, hi)``: packed value positions ``[p0, p1)``
+        land at ``dest`` (an index array for coo, a slice for ranges —
+        both usable as a numpy fancy/basic index **relative to lo**).
+        This is the scatter side of the fused fold: cost is O(overlap),
+        never O(hi - lo)."""
+        if self.imode == "coo":
+            i0, i1 = np.searchsorted(self.indices, (lo, hi))
+            i0, i1 = int(i0), int(i1)
+            if i1 > i0:
+                yield i0, i1, self.indices[i0:i1] - lo
+            return
+        r0 = int(np.searchsorted(self._stops, lo, side="right"))
+        r1 = int(np.searchsorted(self._starts, hi, side="left"))
+        for r in range(r0, r1):
+            s, e = int(self._starts[r]), int(self._stops[r])
+            a, b = max(s, lo), min(e, hi)
+            if b <= a:
+                continue
+            p0 = int(self._offsets[r]) + (a - s)
+            yield p0, p0 + (b - a), slice(a - lo, b - lo)
+
+    def dequant_packed(self, p0: int, p1: int,
+                       out: np.ndarray) -> np.ndarray:
+        """Packed values ``[p0, p1)`` as f64, written into ``out[:p1-p0]``
+        — the ``_dequant_q8`` chain for q8 (one fp32 rounding, bitwise the
+        client-side reconstruction), a plain exact widen for f32."""
+        o = out[:p1 - p0]
+        if self.vmode == "q8":
+            _dequant_q8(self.values, self.scales, self.qchunk, p0, p1, o)
+        else:
+            np.copyto(o, self.values[p0:p1], casting="unsafe")
+        return o
+
+    # ------------------------------------------------------------- protocol
+    def decode_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        """Codec decode of elements [lo, hi) — WITHOUT the base add: zeros
+        everywhere except the traveled coordinates (delta semantics)."""
+        o = out[:hi - lo]
+        o[...] = 0.0
+        buf = np.empty(min(hi - lo, max(self.nnz, 1)), np.float64)
+        for p0, p1, dest in self.iter_spans(lo, hi):
+            # unique destinations: assignment == accumulate-into-zeros
+            o[dest] = self.dequant_packed(p0, p1, buf)
+        return o
+
+    def f64_chunk(self, lo: int, hi: int, out: np.ndarray) -> np.ndarray:
+        """Fused decode + delta-base add of elements [lo, hi)."""
+        o = self.decode_chunk(lo, hi, out)
+        base = self.base
+        if base is None:
+            raise ValueError(
+                "sparse-delta payload needs its round base attached "
+                "(SparseDelta.base) before it can be read")
+        arr = None
+        if isinstance(base, QuantParams):
+            c = base._chunk_cache
+            if c is not None and c[0] == lo and c[1] == hi:
+                arr = c[2]
+        if arr is None:
+            arr = base.f64_chunk(lo, hi, np.empty(hi - lo, np.float64))
+            if isinstance(base, QuantParams):
+                base._chunk_cache = (lo, hi, arr)
+        o += arr            # arr is read-only by contract: never mutated
+        return o
+
+    def to_f64(self, out: Optional[np.ndarray] = None) -> np.ndarray:
+        n = self.layout.total_size
+        if out is None:
+            out = np.empty(n, np.float64)
+        for lo in range(0, n, _QBLOCK):
+            hi = min(lo + _QBLOCK, n)
+            self.f64_chunk(lo, hi, out[lo:hi])
+        return out
+
+    def math_view(self) -> np.ndarray:
+        raise TypeError(
+            "sparse-delta payloads have no raw math view; stream them "
+            "through f64_chunk() / iter_spans()")
+
+    def nbytes(self) -> int:
+        return int(self.indices.nbytes + self.values.nbytes
+                   + (self.scales.nbytes if self.scales is not None else 0))
+
+    def tile_source(self, lo: int = 0, hi: Optional[int] = None) -> None:
+        """Always ``None``: a data-dependent scatter has no tile structure
+        for the stacked Pallas kernels — the fold routes sparse payloads
+        through the O(nnz) scatter path instead (``add_sparse`` /
+        ``kernels.agg_reduce.scatter_wsum``)."""
+        return None

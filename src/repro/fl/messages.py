@@ -27,6 +27,20 @@ codecs coexist behind a leading version byte:
   parameter-decoding paths raise :class:`UnsupportedCodec` instead of
   misreading a sum as a model (the downgrade path for peers that don't
   speak the edge tier).
+- **sparse** (magic ``0xF5``): a structured-sparse **delta** vs the
+  round-start parameters — separate index and value streams
+  (:class:`~repro.fl.flat.SparseDelta`).  Index modes: sorted-unique COO
+  coordinates (TopK of the update magnitude) or sorted ``[start, stop)``
+  ranges (the adapter/LoRA-mask mode where only the trainable subset
+  travels).  Value modes: int8 + one fp32 scale per
+  :data:`~repro.fl.flat.QCHUNK` window of the *packed* stream (composes
+  with the q8 delta machinery) or raw fp32.  Untraveled coordinates mean
+  "delta == 0", so a 32B-param model federates at <<1% of the full-weight
+  ``0xF1`` bytes; the fold consumes it via fused
+  scatter-dequantize-accumulate with no model-size densify.  Like
+  ``0xF4``, parameter-decoding paths raise :class:`UnsupportedCodec` —
+  only the server-side fit fold (with the round base re-attached) can
+  reconstruct.
 - **legacy** (any other first byte — legacy messages start with a msgpack
   fixmap/fixarray marker): per-array ``(dtype, shape, raw-buffer)``
   msgpack triples, exactly the seed format, kept for on-the-wire
@@ -77,8 +91,9 @@ import numpy as np
 import jax
 
 from repro.fl.flat import (FlatParams, Layout, PartialSum, QCHUNK,
-                           QuantParams, WIRE_MAGIC_LO, WIRE_MAGICS,
-                           layout_for, np_dtype, quantizable, quantize_int8)
+                           QuantParams, SparseDelta, WIRE_MAGIC_LO,
+                           WIRE_MAGICS, layout_for, np_dtype, quantizable,
+                           quantize_int8, topk_indices)
 
 NDArrays = List[np.ndarray]
 
@@ -87,11 +102,12 @@ FLAT_MAGIC = WIRE_MAGICS["flat"]
 BF16_MAGIC = WIRE_MAGICS["bf16"]
 Q8_MAGIC = WIRE_MAGICS["q8"]
 PARTIAL_MAGIC = WIRE_MAGICS["partial"]
+SPARSE_MAGIC = WIRE_MAGICS["sparse"]
 _HEADER_ALIGN = 64       # payload starts 64-byte aligned for fast views
 
 #: every codec this build can encode AND decode (advertised by clients in
 #: their get_properties response and intersected by the ServerApp)
-WIRE_CODECS = ("flat", "bf16", "q8", "legacy")
+WIRE_CODECS = ("flat", "bf16", "q8", "sparse", "legacy")
 #: the lossy subset, only used after successful negotiation
 QUANT_CODECS = ("bf16", "q8")
 
@@ -170,11 +186,12 @@ def _is_framed(b: Buffer) -> bool:
 
 
 def _head_of(b: Buffer) -> Tuple[Dict[str, Any], int]:
-    if b[0] not in (FLAT_MAGIC, BF16_MAGIC, Q8_MAGIC, PARTIAL_MAGIC):
+    if b[0] not in (FLAT_MAGIC, BF16_MAGIC, Q8_MAGIC, PARTIAL_MAGIC,
+                    SPARSE_MAGIC):
         raise UnsupportedCodec(
             f"unknown wire codec version byte 0x{b[0]:02X}; this build "
             f"decodes 0xF1 (flat) / 0xF2 (bf16) / 0xF3 (q8) / 0xF4 "
-            f"(partial) and legacy msgpack frames")
+            f"(partial) / 0xF5 (sparse) and legacy msgpack frames")
     (hlen,) = struct.unpack_from("<I", b, 1)
     return msgpack.unpackb(memoryview(b)[5:5 + hlen], raw=False), hlen
 
@@ -222,6 +239,31 @@ def _unframe(b: Buffer, writable: bool = False
             b, layout, head.get("w", 0.0), head.get("n", 0),
             tuple(head.get("ids", [])),
             tuple((n, r) for n, r in head.get("f", [])), offset=off)
+    if b[0] == SPARSE_MAGIC:
+        # structured-sparse delta: [indices int64][scales fp32?][values],
+        # every stream a frozen zero-copy view into the transport buffer
+        imode = "coo" if head.get("im", "c") == "c" else "ranges"
+        vmode = head.get("vm", "q8")
+        nz = int(head["nz"])
+        nidx = 2 * int(head.get("nr", 0)) if imode == "ranges" else nz
+        idx = np.frombuffer(b, np.int64, count=nidx, offset=off)
+        idx.flags.writeable = False      # borrows the transport buffer
+        if imode == "ranges":
+            idx = idx.reshape(-1, 2)     # reshaped view stays read-only
+        voff = off + 8 * nidx
+        qchunk = int(head.get("qc", QCHUNK))
+        scales = None
+        if vmode == "q8":
+            nchunks = -(-nz // qchunk)
+            scales = np.frombuffer(b, np.float32, count=nchunks,
+                                   offset=voff)
+            scales.flags.writeable = False
+            values = np.frombuffer(b, np.int8, count=nz,
+                                   offset=voff + 4 * nchunks)
+        else:
+            values = np.frombuffer(b, np.float32, count=nz, offset=voff)
+        values.flags.writeable = False
+        return head, SparseDelta(layout, imode, idx, values, scales, qchunk)
     # _head_of above already rejects unknown bytes; keep the dispatch
     # locally exhaustive so a new registry entry cannot fall through to
     # a wrong decoder (codec-dispatch invariant, docs/INVARIANTS.md)
@@ -257,7 +299,55 @@ def _pick_wire(codec: Optional[str], fp_layout: Layout,
         if base is not None and base.layout is not fp_layout \
                 and base.layout != fp_layout:
             return "flat"
+    if codec == "sparse":
+        # sparse frames are deltas by construction: no round base (e.g. a
+        # FitIns/get_parameters downlink) or a non-fp32 / layout-mismatched
+        # payload falls back to the lossless flat frame
+        if base is None or not quantizable(fp_layout):
+            return "flat"
+        if base.layout is not fp_layout and base.layout != fp_layout:
+            return "flat"
     return codec
+
+
+def _sparse_frame(head: Dict[str, Any], fp: FlatParams, base: FlatParams,
+                  frac: float, ranges, vmode: str = "q8") -> bytes:
+    """Encode ``fp`` as a structured-sparse 0xF5 delta vs ``base``.
+
+    ``ranges`` (adapter/LoRA mode) is an ``(R, 2)`` array of sorted
+    non-overlapping ``[start, stop)`` element ranges into the flat math
+    vector — only those coordinates travel.  Without ranges, the TopK
+    mode keeps ``max(1, ceil(frac * size))`` coordinates of largest
+    |delta| with deterministic tie-breaking (:func:`~repro.fl.flat
+    .topk_indices`).  Values pack int8 + per-qchunk fp32 scales of the
+    *packed* stream (``vmode="q8"``) or raw fp32 (``"f32"``).
+    """
+    x = fp.math_view() - base.math_view()     # fp32 delta
+    head["d"] = 1
+    if ranges is not None:
+        r = np.ascontiguousarray(np.asarray(ranges, np.int64).reshape(-1, 2))
+        packed = np.concatenate(
+            [x[int(a):int(b)] for a, b in r]) if len(r) \
+            else np.empty(0, np.float32)
+        head["im"], head["nr"] = "r", int(len(r))
+        idx = r
+    else:
+        k = max(1, int(np.ceil(float(frac) * x.size)))
+        idx = topk_indices(np.abs(x), k)
+        packed = x[idx]
+        head["im"] = "c"
+    packed = np.ascontiguousarray(packed, np.float32)
+    head["nz"] = int(packed.size)
+    if vmode == "q8":
+        q, scales = quantize_int8(packed)
+        head["vm"], head["qc"] = "q8", QCHUNK
+        return _frame(SPARSE_MAGIC, head,
+                      np.ascontiguousarray(idx).view(np.uint8),
+                      scales.view(np.uint8), q.view(np.uint8))
+    head["vm"] = "f32"
+    return _frame(SPARSE_MAGIC, head,
+                  np.ascontiguousarray(idx).view(np.uint8),
+                  packed.view(np.uint8))
 
 
 def _leaf_sig(fp: FlatParams) -> List[List[Any]]:
@@ -270,7 +360,9 @@ def _as_flat(parameters: NDArrays, flat: Optional[FlatParams]) -> FlatParams:
 
 def _framed_encode(parameters: NDArrays, flat: Optional[FlatParams],
                    head_extra: Dict[str, Any], codec: Optional[str],
-                   base: Optional[FlatParams] = None) -> bytes:
+                   base: Optional[FlatParams] = None,
+                   sparse_frac: float = 0.01,
+                   sparse_ranges=None) -> bytes:
     """Shared flat-family encode dispatch: flatten, resolve the effective
     codec (lossy requests demote per :func:`_pick_wire`), frame.  Callers
     handle the "legacy" codec themselves — it has no flat layout and each
@@ -280,6 +372,8 @@ def _framed_encode(parameters: NDArrays, flat: Optional[FlatParams],
     head = {"l": _leaf_sig(fp), **head_extra}
     if codec in QUANT_CODECS:
         return _quant_frame(head, fp, codec, base)
+    if codec == "sparse":
+        return _sparse_frame(head, fp, base, sparse_frac, sparse_ranges)
     return _flat_frame(head, fp)
 
 
@@ -365,6 +459,11 @@ class FitRes:
     # weighted-sum fit accumulators (strategy.supports_partial())
     partial: Optional[PartialSum] = field(default=None, repr=False,
                                           compare=False)
+    # set when the result is a structured-sparse delta (0xF5): only the
+    # traveled coordinates changed; the server attaches the round base
+    # and the fit fold scatters it without a model-size densify
+    sparse: Optional[SparseDelta] = field(default=None, repr=False,
+                                          compare=False)
 
     def set_parameters(self, arrays: NDArrays,
                        flat: Optional[FlatParams] = None) -> None:
@@ -373,6 +472,7 @@ class FitRes:
         self.flat = flat
         self.quant = None
         self.partial = None
+        self.sparse = None
 
     def materialize(self) -> NDArrays:
         """Per-leaf fp32 arrays, dequantizing if the result is compressed
@@ -383,6 +483,11 @@ class FitRes:
                     "partial-aggregate results are pre-reduced sums, not "
                     "parameters; only weighted-sum fit accumulators "
                     "(FedAvg family) can fold them")
+            if self.sparse is not None:
+                raise UnsupportedCodec(
+                    "sparse-delta results (0xF5) carry a TopK/adapter "
+                    "delta vs a round base held by the server; only "
+                    "weighted-sum fit accumulators can fold them")
             self.parameters = self.quant.to_arrays()
         return self.parameters
 
@@ -443,6 +548,12 @@ def _materialized(p) -> FlatParams:
             "partial-aggregate frame (0xF4) carries a pre-reduced subtree "
             "sum, not model parameters; it cannot be materialized — only "
             "the root server's fit accumulator consumes it")
+    if isinstance(p, SparseDelta):
+        raise UnsupportedCodec(
+            "sparse-delta frame (0xF5) carries a TopK/adapter delta vs a "
+            "round base held by the server; it cannot be decoded as "
+            "standalone parameters — only the server's fit fold (base "
+            "re-attached) can reconstruct")
     if isinstance(p, QuantParams):
         if p.is_delta:
             raise ValueError(
@@ -470,12 +581,17 @@ def decode_fit_ins(b: bytes) -> FitIns:
 
 
 def encode_fit_res(x: FitRes, codec: Optional[str] = None,
-                   base: Optional[FlatParams] = None) -> bytes:
+                   base: Optional[FlatParams] = None,
+                   sparse_frac: float = 0.01,
+                   sparse_ranges=None) -> bytes:
     """``base`` (the round-start parameters) turns a lossy encode into a
     delta encode: the int8/bf16 payload is (result - base), whose smaller
     dynamic range keeps the quantization error bounded by the update
     magnitude.  The decoder reconstructs after the server re-attaches the
-    base (see :func:`peek_params`)."""
+    base (see :func:`peek_params`).  ``codec="sparse"`` additionally
+    drops coordinates: ``sparse_ranges`` keeps only those ``[start,
+    stop)`` element ranges (adapter/LoRA mode), otherwise the top
+    ``sparse_frac`` of |delta| coordinates travel (0xF5)."""
     if (codec or _DEFAULT_CODEC) == "legacy":     # skip the flatten copy
         return msgpack.packb({"p": [_pack_array(a) for a in x.parameters],
                               "n": x.num_examples,
@@ -483,7 +599,7 @@ def encode_fit_res(x: FitRes, codec: Optional[str] = None,
                              use_bin_type=True)
     return _framed_encode(x.parameters, x.flat,
                           {"n": x.num_examples, "m": _enc_config(x.metrics)},
-                          codec, base)
+                          codec, base, sparse_frac, sparse_ranges)
 
 
 def decode_fit_res(b: bytes) -> FitRes:
@@ -493,6 +609,10 @@ def decode_fit_res(b: bytes) -> FitRes:
             # edge tier: num_examples reports the contributing-client
             # count; the fold weight is p.total_w, read by the accumulator
             return FitRes(None, p.count, head.get("m", {}), partial=p)
+        if isinstance(p, SparseDelta):
+            # stays sparse: the fold scatters the traveled coordinates
+            # once the server re-attaches the round base
+            return FitRes(None, head["n"], head.get("m", {}), sparse=p)
         if isinstance(p, QuantParams):
             # hot path stays compressed: kernels stream it via f64_chunk
             return FitRes(None, head["n"], head.get("m", {}), quant=p)

@@ -41,7 +41,8 @@ from typing import Callable, List, Sequence
 
 import numpy as np
 
-from repro.fl.flat import FlatParams, layout_for, unflatten_vector
+from repro.fl.flat import (FlatParams, layout_for, topk_indices,
+                           unflatten_vector)
 from repro.fl.messages import (TaskIns, TaskRes, decode_fit_ins,
                                decode_fit_res, encode_fit_res)
 
@@ -231,6 +232,20 @@ class SecAggFedAvg(FedAvg):
 # ---------------------------------------------------------------------------
 @dataclass
 class TopKCompressionMod:
+    """Magnitude Top-K delta sparsification, applied as a DENSE result
+    (the non-kept coordinates are reset to the round base — the wire
+    frame is still full-size).  For actually-sparse wire bytes use the
+    negotiated ``sparse`` codec (0xF5), which ships only the kept
+    index/value streams and supersedes this mod for bandwidth; this mod
+    remains useful composed with DP/SecAgg, which need dense buffers.
+
+    Selection uses :func:`repro.fl.flat.topk_indices` — exactly k
+    coordinates, equal-magnitude ties broken by lowest index — so the
+    kept set (and hence the aggregate) is bitwise reproducible across
+    platforms.  The previous ``absd >= thresh`` mask kept EVERY tie at
+    the threshold, making ``topk_kept_frac`` (and the result) depend on
+    how many equal magnitudes the partition landed on."""
+
     fraction: float = 0.1
 
     def __call__(self, task: TaskIns, call_next) -> TaskRes:
@@ -249,12 +264,12 @@ class TopKCompressionMod:
         d = ofp.to_f64()
         d -= i64
         k = max(1, int(np.ceil(self.fraction * d.size)))
-        absd = np.abs(d)
-        thresh = np.partition(absd.ravel(), -k)[-k]
-        mask = absd >= thresh
-        kept = int(mask.sum())
-        i64 += d * mask
+        idx = topk_indices(np.abs(d), k)
+        keep = np.zeros(d.size, bool)
+        keep[idx] = True
+        i64 += d * keep
         fit.set_parameters(unflatten_vector(i64, layout))
-        fit.metrics = dict(fit.metrics, topk_kept_frac=kept / max(d.size, 1))
+        fit.metrics = dict(fit.metrics,
+                           topk_kept_frac=idx.size / max(d.size, 1))
         return TaskRes("fit", task.round, encode_fit_res(fit),
                        task_id=task.task_id)

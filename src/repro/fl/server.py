@@ -32,12 +32,17 @@ NDArrays = List[np.ndarray]
 class ServerConfig:
     num_rounds: int = 3
     round_timeout: float = 120.0
-    # requested wire codec for the model payloads ("q8" int8+per-chunk
-    # scales, "bf16", or None/"flat" for the lossless default).  A lossy
-    # codec is only used after every node advertises it via
-    # get_properties; otherwise the run demotes to "flat" (see
+    # requested wire codec for the model payloads ("sparse" structured-
+    # sparse TopK/adapter deltas, "q8" int8+per-chunk scales, "bf16", or
+    # None/"flat" for the lossless default).  A lossy codec is only used
+    # after every node advertises it via get_properties; otherwise the
+    # run demotes down the ladder sparse -> q8 -> flat (see
     # repro.fl.messages module docstring, "Codec negotiation").
     codec: Optional[str] = None
+    # "sparse" codec knob: fraction of coordinates a TopK client update
+    # keeps (clients exposing trainable_ranges() ship their adapter
+    # subset instead and ignore this).  Rides in the fit config.
+    sparse_frac: float = 0.01
     # aggregation kernel backend for the strategy ("numpy" | "pallas" |
     # None = auto: Pallas on TPU hosts, numpy elsewhere).  Applied to the
     # strategy at app construction so streaming arrival-order
@@ -216,6 +221,15 @@ class ServerApp:
             return "flat", ""
         if want not in WIRE_CODECS:
             raise ValueError(f"unknown codec {want!r}; have {WIRE_CODECS}")
+        note = ""
+        if want == "sparse" and not self.strategy.supports_partial():
+            # the sparse fold scatters into a weighted-sum accumulator;
+            # strategies that need dense per-client rows (median/trim/
+            # Krum — exactly the ones that refuse 0xF4 partials) get the
+            # next rung down instead of a protocol violation per node
+            note = ("sparse demoted to q8: strategy needs dense "
+                    "per-client updates")
+            want = "q8"
         tasks = {node: encode_task_ins(TaskIns(
             "get_properties", 0, b"", task_id=uuid.uuid4().hex))
             for node in nodes}
@@ -234,9 +248,15 @@ class ServerApp:
                                   on_props)
         if failures or supported is None or want not in supported:
             culprits = sorted(set(lacking) | {n for n, _ in failures})
-            return "flat", (f"{want} demoted to flat by "
-                            f"{','.join(culprits) or 'empty fleet'}")
-        return want, ""
+            who = ",".join(culprits) or "empty fleet"
+            if want == "sparse" and not failures and supported \
+                    and "q8" in supported:
+                # a fleet that lacks sparse but all speaks q8 keeps the
+                # int8-delta rung instead of falling to raw fp32
+                return "q8", f"sparse demoted to q8 by {who}"
+            demote = f"{want} demoted to flat by {who}"
+            return "flat", f"{note}; {demote}" if note else demote
+        return want, note
 
     # ------------------------------------------------ shared round phases
     def _initial_parameters(self, driver: Driver,
@@ -340,6 +360,9 @@ class ServerApp:
             for node, ins in fit_cfg.items():
                 if wire_codec != "flat":
                     ins.config.setdefault("codec", wire_codec)
+                if wire_codec == "sparse":
+                    ins.config.setdefault("sparse_frac",
+                                          self.config.sparse_frac)
                 if partial_ok:
                     # edge aggregators may pre-reduce their subtree into
                     # one 0xF4 partial-sum frame; leaf clients ignore it
@@ -369,6 +392,9 @@ class ServerApp:
                 q = res.quant
                 if q is not None and q.is_delta and q.base is None:
                     q.base = _base_for(node)
+                sp = res.sparse
+                if sp is not None and sp.base is None:
+                    sp.base = _base_for(node)
                 acc.add(node, res)
                 fit_ok.append(node)
 
@@ -456,6 +482,8 @@ class ServerApp:
                                               [node])[node]
             if wire_codec != "flat":
                 ins.config.setdefault("codec", wire_codec)
+            if wire_codec == "sparse":
+                ins.config.setdefault("sparse_frac", cfg.sparse_frac)
             if partial_ok:
                 ins.config.setdefault("partial", 1)
             memo = enc_memos.setdefault(ver, {})
@@ -493,6 +521,9 @@ class ServerApp:
                         q = res.quant
                         if q is not None and q.is_delta and q.base is None:
                             q.base = base_for(payload)
+                        sp = res.sparse
+                        if sp is not None and sp.base is None:
+                            sp.base = base_for(payload)
                         if buf.offer(node, res, ver,
                                      parameters) == "stale":
                             failures.append(

@@ -59,6 +59,10 @@ def _flat_of(res: FitRes):
         raise ValueError(
             "partial-aggregate result reached a per-client accumulator; "
             "this strategy cannot fold pre-reduced sums")
+    if res.sparse is not None:
+        # a structured-sparse delta (0xF5); StreamingWeightedSum.add
+        # routes it to the O(nnz) scatter fold via its is_sparse attr
+        return res.sparse
     if res.flat is not None:
         return res.flat
     if res.quant is not None:
@@ -187,6 +191,7 @@ class _WeightedFitAcc(FitAccumulator):
         super().__init__(strategy, rnd, current)
         self.pairs: List[Tuple[str, FlatParams, float]] = []
         self.partials: List[Tuple[str, Any]] = []   # (node, PartialSum)
+        self.sparses: List[Tuple[str, Any, float]] = []  # (node, SparseDelta, w)
         self._streaming: Optional[kernels.StreamingWeightedSum] = None
         self._count = 0
         self._payloads = 0
@@ -207,6 +212,16 @@ class _WeightedFitAcc(FitAccumulator):
             _check_shapes(ps, self.current, node)
             self.partials.append((node, ps))
             self._count += ps.count
+            self._payloads += 1
+            return
+        if res.sparse is not None:
+            # structured-sparse delta (0xF5): buffered (O(nnz) bytes)
+            # and folded in canonical node order at finalize so the
+            # scatter fold is bitwise-invariant across arrival order
+            sp = res.sparse
+            _check_shapes(sp, self.current, node)
+            self.sparses.append((node, sp, float(res.num_examples)))
+            self._count += 1
             self._payloads += 1
             return
         fp = _flat_of(res)
@@ -235,19 +250,27 @@ class _WeightedFitAcc(FitAccumulator):
             raise QuorumNotMet(
                 f"round {self.rnd}: {self._count} results < quorum "
                 f"{need} (failures: {failures})")
-        if self.partials:
-            # any partial forces the streaming fold (a pre-reduced sum
-            # has no per-client rows for the deferred kernel): leaves
-            # first in canonical node order, then partials likewise —
-            # one edge over the whole fleet continues the flat
-            # low-memory fold bitwise (acc = 0 + S_e; one divide by W)
+        if self.partials or self.sparses:
+            # any partial or sparse delta forces the streaming fold (a
+            # pre-reduced sum has no per-client rows for the deferred
+            # kernel; a sparse delta scatters into the fp64 accumulator):
+            # leaves first in canonical node order, then sparse deltas,
+            # then partials likewise — one edge over the whole fleet
+            # continues the flat low-memory fold bitwise (acc = 0 + S_e;
+            # one divide by W), and the sparse scatter is invariant
+            # across arrival order by construction
             if self._streaming is None:
-                self._streaming = self._make_streaming(
-                    self.partials[0][1].layout)
+                layout = (self.partials[0][1].layout if self.partials
+                          else self.sparses[0][1].layout)
+                self._streaming = self._make_streaming(layout)
             self.pairs.sort(key=lambda p: p[0])
             for _, fp, w in self.pairs:
                 self._streaming.add(fp, w)
             self.pairs = []
+            self.sparses.sort(key=lambda s: s[0])
+            for _, sp, w in self.sparses:
+                self._streaming.add_sparse(sp, w)
+            self.sparses = []
             self.partials.sort(key=lambda p: p[0])
             for _, ps in self.partials:
                 self._streaming.add_partial(ps)
@@ -504,6 +527,14 @@ class _StackedFitAcc(FitAccumulator):
         self.entries: List[Tuple[str, FlatParams, float]] = []
 
     def add(self, node, res):
+        if res.sparse is not None:
+            # median/trim/Krum need every client's dense update row;
+            # negotiation never picks "sparse" for these strategies
+            # (supports_partial() is False), so a sparse arrival here is
+            # a protocol violation — demote the node, don't misfold
+            raise ValueError(
+                "sparse-delta result reached a stacked accumulator; "
+                "this strategy needs dense per-client updates")
         fp = _flat_of(res)
         _check_shapes(fp, self.current, node)
         self.entries.append((node, fp, float(res.num_examples)))

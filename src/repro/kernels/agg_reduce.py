@@ -362,3 +362,68 @@ def gram(data: np.ndarray, *,
             interpret=interpret,
         )(*args)
         return np.array(out)            # writable copy
+
+
+# ---------------------------------------------------------------------------
+# structured-sparse scatter fold (0xF5 payloads)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("q8",))
+def _sparse_contrib(vals, escales, w, *, q8: bool):
+    if q8:
+        # exact int8*fp32 product in fp64, then ONE fp32 rounding — the
+        # numpy ``_dequant_q8`` chain bitwise (module docstring)
+        t = vals.astype(jnp.float64) * escales.astype(jnp.float64)
+        r = t.astype(jnp.float32).astype(jnp.float64)
+    else:
+        r = vals.astype(jnp.float64)
+    return r * w
+
+
+def _pad_pow2(a: np.ndarray) -> np.ndarray:
+    """Zero-pad to the next power of two so `_sparse_contrib` compiles
+    once per size class instead of once per span length."""
+    n = a.size
+    p = 1
+    while p < n:
+        p *= 2
+    if p == n:
+        return a
+    out = np.zeros(p, a.dtype)
+    out[:n] = a
+    return out
+
+
+def scatter_wsum(acc: np.ndarray, dest, vals: np.ndarray, w: float, *,
+                 scales: Optional[np.ndarray] = None,
+                 qchunk: int = DEFAULT_QCHUNK, pos0: int = 0) -> None:
+    """``acc[dest] += w * dequant(vals)`` — the 0xF5 sparse-delta fold.
+
+    Deliberately NOT a ``pl.pallas_call``: a data-dependent scatter has
+    no tile structure (the destination indices are runtime values, so
+    there is no BlockSpec that maps grid steps to disjoint output
+    blocks).  Instead the O(nnz) dequantize+scale chain runs as a jitted
+    XLA elementwise graph under scoped x64 — mirroring the numpy
+    ``_dequant_q8`` rounding chain bitwise — and the final unique-index
+    scatter-add happens on the host accumulator, where `+=` with unique
+    indices has no reduction-order ambiguity.
+
+    ``acc``: fp64 accumulator segment (mutated in place).  ``dest``: a
+    slice or unique index array *relative to acc*.  ``vals``: packed
+    int8 (with ``scales``, one per ``qchunk`` window of the packed
+    stream; ``pos0`` is the packed position of ``vals[0]``) or fp32.
+    """
+    n = vals.size
+    if n == 0:
+        return
+    q8 = vals.dtype == np.int8
+    if q8:
+        # per-element scale of the packed stream (host gather, O(nnz))
+        esc = np.asarray(scales, np.float32)[
+            (pos0 + np.arange(n, dtype=np.int64)) // qchunk]
+        esc = _pad_pow2(esc)
+    else:
+        esc = np.zeros(0, np.float32)
+    with jax.experimental.enable_x64():
+        contrib = _sparse_contrib(_pad_pow2(vals), esc,
+                                  jnp.float64(w), q8=q8)
+        acc[dest] += np.asarray(contrib)[:n]

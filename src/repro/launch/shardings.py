@@ -36,8 +36,12 @@ def params_shardings(model: Model, mesh: Mesh, rules=None):
         # salvage pass: a big weight whose every rule-assigned dim fell back
         # (e.g. Yi's 56 heads on model=16) would be fully replicated — shard
         # its largest model-divisible dim instead (§Perf iteration D:
-        # replicated q/o projections cost yi-34b decode +12GB/device)
-        if (all(e is None for e in spec) and leaf.size * 2 >= 8e6
+        # replicated q/o projections cost yi-34b decode +12GB/device).
+        # The byte estimate uses the leaf's own itemsize: a hard-coded
+        # bf16 "* 2" made fp32/fp64 params dodge or mis-trigger the 8 MB
+        # replication threshold.
+        if (all(e is None for e in spec)
+                and leaf.size * leaf.dtype.itemsize >= 8e6
                 and msz > 1):
             cand = [i for i, d in enumerate(leaf.shape) if d % msz == 0]
             if cand:

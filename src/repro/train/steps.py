@@ -3,15 +3,21 @@
 These are the functions the launcher jits (with in/out shardings) and the
 dry-run lowers.  They are mesh-agnostic: distribution comes entirely from
 the shardings attached at jit time (pjit-style; DESIGN.md §5).
+
+:func:`get_train_step` is the federated entry point: a process-wide cache
+of compiled train steps keyed by ``(model_cfg, train_cfg, impl, mesh)``,
+so N simulated FL clients with identical configs share ONE jitted (and,
+with a mesh, mesh-sharded) step instead of re-tracing per client.
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.config import TrainConfig
+from repro.config import ModelConfig, TrainConfig
 from repro.models.api import Model
 from repro.optim import make_optimizer
 from repro.optim.optimizers import clip_by_global_norm
@@ -104,6 +110,77 @@ def make_train_step(model: Model, train_cfg: TrainConfig, impl: str = "xla"):
         return TrainState(params, opt_state, state.step + 1), out_metrics
 
     return train_step
+
+
+# ---------------------------------------------------------------------------
+# shared compiled steps (federated clients: one trace per config, not per
+# client) + mesh-sharded jit
+# ---------------------------------------------------------------------------
+_STEP_LOCK = threading.Lock()
+_STEP_CACHE: Dict[Any, Any] = {}        # guarded-by: _STEP_LOCK
+
+
+def _mesh_key(mesh) -> Any:
+    """Hashable identity of a mesh: axis names, shape, and the concrete
+    device ids (two meshes over different devices must not share a
+    compiled step)."""
+    if mesh is None:
+        return None
+    return (tuple(mesh.axis_names), tuple(mesh.devices.shape),
+            tuple(d.id for d in mesh.devices.flat))
+
+
+def get_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig,
+                   impl: str = "xla", mesh=None):
+    """The compiled train step for ``(model_cfg, train_cfg, impl, mesh)``.
+
+    Process-wide cache: every FL client with the same config tuple gets
+    the SAME jitted callable, so an N-client simulation traces and
+    compiles once instead of N times (the configs are frozen dataclasses
+    — hashable cache keys).  With a mesh, the step is jitted with
+    fsdp-sharded in/out shardings (:func:`make_sharded_train_step`);
+    without one, a plain ``jax.jit``.
+    """
+    key = (model_cfg, train_cfg, impl, _mesh_key(mesh))
+    with _STEP_LOCK:
+        fn = _STEP_CACHE.get(key)
+    if fn is not None:
+        return fn
+    from repro.models.api import build_model
+
+    model = build_model(model_cfg)
+    if mesh is None:
+        fn = jax.jit(make_train_step(model, train_cfg, impl=impl))
+    else:
+        fn = make_sharded_train_step(model, train_cfg, mesh, impl=impl)
+    with _STEP_LOCK:
+        # racing builders may both compile; first write wins so every
+        # caller shares one callable afterwards
+        return _STEP_CACHE.setdefault(key, fn)
+
+
+def make_sharded_train_step(model: Model, train_cfg: TrainConfig, mesh,
+                            impl: str = "xla"):
+    """Jit the train step with mesh shardings attached (pjit-style).
+
+    ``launch/shardings.py`` maps every TrainState leaf (params AND Adam
+    moments — the moments shard exactly like their params) plus the
+    token/label batch onto the mesh's fsdp "data"/"model" axes; the
+    returned callable constrains its inputs and outputs to those
+    shardings, so client fit steps on a (1,1) local mesh and a
+    production (16,16) mesh run the same code path.
+    """
+    from repro.launch.shardings import batch_shardings, state_shardings
+
+    st_sh = state_shardings(model, train_cfg, mesh)
+    B = train_cfg.global_batch
+    S = train_cfg.seq_len
+    b_sh = batch_shardings(
+        {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}, mesh)
+    step = make_train_step(model, train_cfg, impl=impl)
+    return jax.jit(step, in_shardings=(st_sh, b_sh),
+                   out_shardings=(st_sh, None))
 
 
 def make_eval_step(model: Model, impl: str = "xla"):

@@ -10,6 +10,7 @@ WIRE_MAGICS: Dict[str, int] = {
     "bf16": 0xF2,
     "q8": 0xF3,
     "partial": 0xF4,
+    "sparse": 0xF5,
     "metric_batch": 0xFB,
 }
-PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8", "partial")
+PAYLOAD_CODEC_MAGICS = ("flat", "bf16", "q8", "partial", "sparse")

@@ -201,11 +201,12 @@ def test_registry_is_single_source_of_truth():
     from repro.fl.flat import (PAYLOAD_CODEC_MAGICS, WIRE_MAGIC_HI,
                                WIRE_MAGIC_LO, WIRE_MAGICS)
     from repro.fl.messages import (BF16_MAGIC, FLAT_MAGIC, PARTIAL_MAGIC,
-                                   Q8_MAGIC)
+                                   Q8_MAGIC, SPARSE_MAGIC)
     assert FLAT_MAGIC == WIRE_MAGICS["flat"]
     assert BF16_MAGIC == WIRE_MAGICS["bf16"]
     assert Q8_MAGIC == WIRE_MAGICS["q8"]
     assert PARTIAL_MAGIC == WIRE_MAGICS["partial"]
+    assert SPARSE_MAGIC == WIRE_MAGICS["sparse"]
     assert set(PAYLOAD_CODEC_MAGICS) <= set(WIRE_MAGICS)
     vals = list(WIRE_MAGICS.values())
     assert len(vals) == len(set(vals)), "duplicate wire byte claimed"

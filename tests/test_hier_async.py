@@ -123,9 +123,9 @@ def test_partial_frame_rejected_by_parameter_decoders():
 
 
 def test_next_reserved_byte_still_unknown():
-    # 0xF4 is now taken; 0xF5 must remain the canonical unknown probe
+    # 0xF4 and 0xF5 are now taken; 0xF6 is the canonical unknown probe
     wire = bytearray(encode_partial_fit_res(_partial()))
-    wire[0] = WIRE_MAGICS["partial"] + 1
+    wire[0] = WIRE_MAGICS["sparse"] + 1
     with pytest.raises(UnsupportedCodec):
         decode_fit_res(bytes(wire))
 

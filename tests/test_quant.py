@@ -121,7 +121,7 @@ def test_fit_ins_and_arrays_interop_matrix(codec):
 
 
 # repro: allow[codec-literal] reason=deliberately-unregistered bytes probing the UnsupportedCodec path
-@pytest.mark.parametrize("magic", [0xF0, 0xF5, 0xFF])
+@pytest.mark.parametrize("magic", [0xF0, 0xF6, 0xFF])
 def test_reserved_version_bytes_raise_unsupported_codec(magic):
     frame = encode_fit_res(FitRes(_f32_arrays(), 1, {}), codec="flat")
     doctored = bytes([magic]) + frame[1:]

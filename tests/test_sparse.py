@@ -1,0 +1,583 @@
+"""Structured-sparse 0xF5 delta codec (TopK / adapter-LoRA mode) tests.
+
+Covers the contracts the federated-LLM wire path rests on:
+- deterministic TopK selection (exactly k, lowest-index tie-breaking) —
+  shared by the 0xF5 encoder and TopKCompressionMod;
+- 0xF5 round-trip in both index modes (coo TopK / adapter ranges) and
+  both value modes (q8 / f32): traveled coordinates within the int8
+  bound of the true delta, untouched coordinates bitwise the base;
+- zero-copy frozen decode (index/scale/value streams are read-only
+  views into the transport buffer);
+- hypothesis error bound for TopK-int8 deltas;
+- UnsupportedCodec on every parameter-decoding path (a sparse delta is
+  meaningless without the server-held base);
+- sparse wire bytes << dense 0xF1/0xF3 bytes;
+- fold correctness and bitwise invariance: the scatter fold matches the
+  dense fp32 path within the quantization bound, is bitwise identical
+  across arrival orders and shard counts, and the Pallas-backend device
+  chain matches numpy bitwise;
+- negotiation: sparse demotes to q8 (fleet lacks sparse but speaks q8,
+  or the strategy needs dense rows) and to flat (fleet lacks both);
+- the sharding salvage pass sizes leaves by their own itemsize;
+- end-to-end: the quickstart grid converges under a sparse negotiation
+  within tolerance of the lossless run.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # bare env: deterministic shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import repro.fl.agg_kernels as K
+from repro.fl.flat import (FlatParams, QCHUNK, SparseDelta, layout_of,
+                           topk_indices)
+from repro.fl.messages import (FLAT_MAGIC, FitRes, UnsupportedCodec,
+                               bytes_to_arrays, decode_fit_ins,
+                               decode_fit_res, encode_fit_res)
+from repro.fl.strategy import make_strategy
+
+pytestmark = pytest.mark.sparse
+
+RNG = np.random.default_rng(55)
+SPARSE_MAGIC = 0xF5  # repro: allow[codec-literal] reason=wire-format pin, tests must not import the value they verify
+
+
+def _f32_arrays(seed=0, shapes=((33, 17), (1500,), (2, 3, 5))):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(0, 0.5, size=s).astype(np.float32) for s in shapes]
+
+
+def _sparse_results(n_clients, seed, base, frac=0.05, scale=1e-3):
+    """(dense FitRes, decoded sparse FitRes) pairs vs a shared base."""
+    rng = np.random.default_rng(seed)
+    dense, sparse = [], []
+    for c in range(n_clients):
+        arrays = [a + rng.normal(0, scale, size=a.shape).astype(np.float32)
+                  for a in base.to_arrays()]
+        w = 10 + 3 * c
+        dense.append((f"site-{c}", FitRes(arrays, w, {})))
+        dec = decode_fit_res(encode_fit_res(FitRes(arrays, w, {}),
+                                            codec="sparse", base=base,
+                                            sparse_frac=frac))
+        dec.sparse.base = base
+        sparse.append((f"site-{c}", dec))
+    return dense, sparse
+
+
+def _sparse_bound(sp: SparseDelta) -> float:
+    """Per-coordinate reconstruction bound on traveled coordinates."""
+    if sp.vmode != "q8":
+        return 1e-12
+    return float(sp.scales.max()) * 0.5 * (1 + 1e-5) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# deterministic TopK selection
+# ---------------------------------------------------------------------------
+def test_topk_indices_exactly_k_lowest_index_ties():
+    mag = np.zeros(100, np.float32)
+    mag[10:90] = 1.0                       # 80-way tie at the threshold
+    mag[[7, 40, 93]] = 2.0                 # strictly above the tie level
+    idx = topk_indices(mag, 10)
+    assert idx.size == 10 and idx.dtype == np.int64
+    # the 3 strict winners + the 7 LOWEST-index ties, sorted ascending
+    np.testing.assert_array_equal(
+        idx, sorted([7, 40, 93] + [10, 11, 12, 13, 14, 15, 16]))
+
+
+def test_topk_indices_is_permutation_invariant_on_ties():
+    """Equal-magnitude ties resolve by coordinate, not memory order."""
+    mag = np.ones(64, np.float64)
+    np.testing.assert_array_equal(topk_indices(mag, 5), np.arange(5))
+    np.testing.assert_array_equal(topk_indices(mag[::-1], 5), np.arange(5))
+
+
+def test_topk_indices_edge_cases():
+    mag = np.abs(RNG.normal(size=17))
+    assert topk_indices(mag, 0).size == 0
+    np.testing.assert_array_equal(topk_indices(mag, 17), np.arange(17))
+    np.testing.assert_array_equal(topk_indices(mag, 99), np.arange(17))
+    one = topk_indices(mag, 1)
+    assert one.size == 1 and mag[one[0]] == mag.max()
+
+
+def test_topk_mod_kept_fraction_is_exact_under_ties():
+    """TopKCompressionMod regression: an all-equal |delta| used to keep
+    EVERY tie (kept_frac == 1.0); the deterministic selection keeps
+    exactly ceil(fraction * n)."""
+    from repro.fl.messages import (FitIns, TaskIns, decode_task_res,
+                                   encode_fit_ins, encode_task_ins)
+    from repro.fl.mods import TopKCompressionMod
+    from repro.fl.client import ClientApp, NumPyClient
+
+    base = [np.zeros((40, 25), np.float32)]
+
+    class C(NumPyClient):
+        def fit(self, parameters, config):
+            return [p + np.float32(0.5) for p in parameters], 3, {}
+
+    app = ClientApp(lambda cid: C().to_client(),
+                    mods=[TopKCompressionMod(fraction=0.1)])
+    t = TaskIns("fit", 0, encode_fit_ins(FitIns(base)), task_id="t")
+    tr = decode_task_res(app.handle(encode_task_ins(t)))
+    fit = decode_fit_res(tr.payload)
+    assert fit.metrics["topk_kept_frac"] == pytest.approx(0.1)
+    out = fit.materialize()[0]
+    # deterministic tie-break: exactly the first 100 coordinates kept
+    assert (out.ravel()[:100] == np.float32(0.5)).all()
+    assert (out.ravel()[100:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# 0xF5 round-trip
+# ---------------------------------------------------------------------------
+def test_sparse_roundtrip_coo_q8():
+    base = FlatParams.from_arrays(_f32_arrays(seed=1))
+    n = base.layout.total_size
+    result = [a + RNG.normal(0, 1e-3, size=a.shape).astype(np.float32)
+              for a in base.to_arrays()]
+    b = encode_fit_res(FitRes(result, 7, {"loss": 0.5}), codec="sparse",
+                       base=base, sparse_frac=0.1)
+    assert b[0] == SPARSE_MAGIC
+    dec = decode_fit_res(b)
+    assert dec.parameters is None and dec.num_examples == 7
+    sp = dec.sparse
+    assert sp.imode == "coo" and sp.vmode == "q8"
+    assert sp.nnz == max(1, int(np.ceil(0.1 * n)))
+    sp.base = base
+    got = sp.to_f64()
+    want = FlatParams.from_arrays(result).to_f64()
+    bwant = base.to_f64()
+    kept = np.zeros(n, bool)
+    kept[sp.indices] = True
+    bound = _sparse_bound(sp)
+    assert np.abs(got[kept] - want[kept]).max() <= bound
+    # untouched coordinates are BITWISE the base
+    np.testing.assert_array_equal(got[~kept], bwant[~kept])
+
+
+def test_sparse_roundtrip_ranges_mode():
+    base = FlatParams.from_arrays(_f32_arrays(seed=2))
+    n = base.layout.total_size
+    result = [a + RNG.normal(0, 1e-3, size=a.shape).astype(np.float32)
+              for a in base.to_arrays()]
+    ranges = np.array([[0, 100], [561, 561 + 800], [n - 64, n]], np.int64)
+    b = encode_fit_res(FitRes(result, 7, {}), codec="sparse", base=base,
+                       sparse_ranges=ranges)
+    dec = decode_fit_res(b)
+    sp = dec.sparse
+    assert sp.imode == "ranges"
+    np.testing.assert_array_equal(np.asarray(sp.indices), ranges)
+    assert sp.nnz == int((ranges[:, 1] - ranges[:, 0]).sum())
+    sp.base = base
+    got, want, bwant = (sp.to_f64(),
+                        FlatParams.from_arrays(result).to_f64(),
+                        base.to_f64())
+    kept = np.zeros(n, bool)
+    for a, b_ in ranges:
+        kept[a:b_] = True
+    assert np.abs(got[kept] - want[kept]).max() <= _sparse_bound(sp)
+    np.testing.assert_array_equal(got[~kept], bwant[~kept])
+
+
+def test_sparse_decode_is_zero_copy_and_frozen():
+    base = FlatParams.from_arrays(_f32_arrays(seed=3))
+    result = [a + np.float32(1e-3) for a in base.to_arrays()]
+    for kw in ({"sparse_frac": 0.05},
+               {"sparse_ranges": np.array([[10, 900]], np.int64)}):
+        sp = decode_fit_res(encode_fit_res(
+            FitRes(result, 1, {}), codec="sparse", base=base, **kw)).sparse
+        streams = [sp.indices, sp.values] + \
+            ([sp.scales] if sp.scales is not None else [])
+        for s in streams:
+            assert not s.flags["OWNDATA"]
+            assert not s.flags["WRITEABLE"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 3 * QCHUNK + 7), st.integers(0, 10_000),
+       st.floats(1e-5, 10.0))
+def test_sparse_topk_int8_error_bound(n, seed, scale):
+    """Any length, any update magnitude: traveled coordinates reconstruct
+    within the per-chunk int8 bound, untouched ones are bitwise base."""
+    rng = np.random.default_rng(seed)
+    base = FlatParams.from_arrays([rng.normal(size=n).astype(np.float32)])
+    result = [base.to_arrays()[0]
+              + rng.normal(0, scale, size=n).astype(np.float32)]
+    dec = decode_fit_res(encode_fit_res(FitRes(result, 1, {}),
+                                        codec="sparse", base=base,
+                                        sparse_frac=0.25))
+    sp = dec.sparse
+    sp.base = base
+    got = sp.to_f64()
+    want = FlatParams.from_arrays(result).to_f64()
+    kept = np.zeros(n, bool)
+    kept[sp.indices] = True
+    assert np.abs(got[kept] - want[kept]).max() <= _sparse_bound(sp)
+    np.testing.assert_array_equal(got[~kept], base.to_f64()[~kept])
+
+
+def test_sparse_wire_bytes_are_under_one_percent():
+    """The headline claim at LLM scale: a 0.1% TopK delta ships at <1%
+    of the dense fp32 frame (int64 index + int8 value + scale streams)."""
+    arrays = [RNG.normal(size=(1 << 20,)).astype(np.float32)]
+    base = FlatParams.from_arrays(
+        [a + np.float32(1.0) for a in arrays])  # nonzero delta everywhere
+    flat = encode_fit_res(FitRes(arrays, 1, {}), codec="flat")
+    spb = encode_fit_res(FitRes(arrays, 1, {}), codec="sparse", base=base,
+                         sparse_frac=0.001)
+    assert len(spb) / len(flat) < 0.01, len(spb) / len(flat)
+
+
+def test_sparse_without_base_demotes_to_flat():
+    """No round base (e.g. a FitIns downlink, or a reshaped result) means
+    no delta: the encoder falls back to lossless 0xF1."""
+    res = FitRes(_f32_arrays(seed=4), 1, {})
+    assert encode_fit_res(res, codec="sparse")[0] == FLAT_MAGIC
+    wrong = FlatParams.from_arrays([np.ones((3, 3), np.float32)])
+    assert encode_fit_res(res, codec="sparse", base=wrong)[0] == FLAT_MAGIC
+
+
+def test_sparse_frame_raises_unsupported_on_parameter_paths():
+    base = FlatParams.from_arrays(_f32_arrays(seed=5))
+    result = [a + np.float32(1e-3) for a in base.to_arrays()]
+    b = encode_fit_res(FitRes(result, 1, {}), codec="sparse", base=base,
+                       sparse_frac=0.05)
+    with pytest.raises(UnsupportedCodec, match="sparse"):
+        bytes_to_arrays(b)
+    with pytest.raises(UnsupportedCodec, match="sparse"):
+        decode_fit_ins(b)
+    with pytest.raises(UnsupportedCodec, match="sparse"):
+        decode_fit_res(b).materialize()
+
+
+def test_sparse_delta_validation_rejects_byzantine_indices():
+    layout = layout_of([np.empty(100, np.float32)])
+    vals = np.ones(3, np.float32)
+    for bad in (np.array([5, 4, 9]), np.array([5, 5, 9]),
+                np.array([5, 7, 100]), np.array([-1, 5, 9])):
+        with pytest.raises(ValueError):
+            SparseDelta(layout, "coo", bad.astype(np.int64), vals)
+    for bad in (np.array([[10, 10]]), np.array([[50, 40]]),
+                np.array([[0, 2], [1, 3]]), np.array([[90, 120]])):
+        with pytest.raises(ValueError):
+            SparseDelta(layout, "ranges", bad.astype(np.int64),
+                        np.ones(int(np.maximum(
+                            bad[:, 1] - bad[:, 0], 0).sum()), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# aggregation folds
+# ---------------------------------------------------------------------------
+def _weighted_reference(results):
+    """Reference weighted mean in f64: reconstruct every payload densely
+    (sparse/quant via their own to_f64 chain) and fold by hand."""
+    wsum = tw = None
+    for _, r in results:
+        if r.sparse is not None:
+            x = r.sparse.to_f64()
+        elif r.quant is not None:
+            x = r.quant.to_f64()
+        else:
+            x = FlatParams.from_arrays(r.parameters).to_f64()
+        w = float(r.num_examples)
+        wsum = w * x if wsum is None else wsum + w * x
+        tw = w if tw is None else tw + w
+    return wsum / tw
+
+
+@pytest.mark.parametrize("kw", [{}, {"low_memory": True}])
+def test_fedavg_consumes_sparse_results(kw):
+    """The scatter fold matches a hand-rolled dense reconstruction of the
+    same sparsified payloads (fold math, base deferral, normalization)."""
+    base = FlatParams.from_arrays(_f32_arrays(seed=31))
+    _, sparse = _sparse_results(6, 32, base)
+    current = base.to_arrays()
+    got, m = make_strategy("fedavg", **kw).aggregate_fit(1, sparse, [],
+                                                         current)
+    assert m["num_clients"] == 6
+    np.testing.assert_allclose(FlatParams.from_arrays(got).to_f64(),
+                               _weighted_reference(sparse),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_sparse_fold_bitwise_invariant_across_arrival_orders():
+    base = FlatParams.from_arrays(_f32_arrays(seed=33))
+    _, sparse = _sparse_results(5, 34, base)
+    strat = make_strategy("fedavg")
+    outs = []
+    for order in (sparse, sparse[::-1], sparse[2:] + sparse[:2]):
+        acc = strat.fit_accumulator(1, base.to_arrays())
+        for node, r in order:
+            acc.add(node, r)
+        got, _ = acc.finalize([])
+        outs.append(got)
+    for got in outs[1:]:
+        for g, w in zip(got, outs[0]):
+            np.testing.assert_array_equal(g, w)
+
+
+@pytest.mark.shard
+def test_sparse_fold_bitwise_invariant_across_shard_counts():
+    base = FlatParams.from_arrays(_f32_arrays(seed=35))
+    _, sparse = _sparse_results(4, 36, base)
+    outs = []
+    for shards in (None, 2, 5):
+        s = K.StreamingWeightedSum(base.layout, backend="numpy",
+                                   shards=shards)
+        for _, r in sparse:
+            s.add(r.sparse, float(r.num_examples))
+        outs.append(s.finalize().math_view().copy())
+    for got in outs[1:]:
+        np.testing.assert_array_equal(got, outs[0])
+
+
+def test_sparse_and_q8_results_fold_together():
+    """A mixed fleet: some clients ship 0xF5, some 0xF3 deltas, some raw
+    fp32 — one round, one accumulator, bounded error vs the dense fold."""
+    base = FlatParams.from_arrays(_f32_arrays(seed=37))
+    dense, sparse = _sparse_results(4, 38, base)
+    mixed = []
+    for i, ((node, d), (_, s)) in enumerate(zip(dense, sparse)):
+        if i % 3 == 0:
+            mixed.append((node, d))
+        elif i % 3 == 1:
+            q = decode_fit_res(encode_fit_res(d, codec="q8", base=base))
+            q.quant.base = base
+            mixed.append((node, q))
+        else:
+            mixed.append((node, s))
+    strat = make_strategy("fedavg")
+    got, _ = strat.aggregate_fit(1, mixed, [], base.to_arrays())
+    np.testing.assert_allclose(FlatParams.from_arrays(got).to_f64(),
+                               _weighted_reference(mixed),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_sparse_raw_sum_is_true_weighted_sum():
+    """raw_sum() (the edge 0xF4 pre-reduce) must report Σ w·(base+delta),
+    with the deferred bases folded at their summed weight."""
+    base = FlatParams.from_arrays(_f32_arrays(seed=39))
+    dense, sparse = _sparse_results(3, 40, base)
+    s = K.StreamingWeightedSum(base.layout)
+    for _, r in sparse:
+        s.add(r.sparse, float(r.num_examples))
+    got = s.raw_sum()
+    want = np.zeros(base.layout.total_size, np.float64)
+    for _, r in sparse:
+        want += float(r.num_examples) * r.sparse.to_f64()
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-9)
+
+
+def test_stacked_strategies_reject_sparse_results():
+    """median/trim/Krum need dense per-client rows; a sparse result that
+    reaches them (negotiation bypassed) is a loud per-round error, not a
+    silent wrong answer."""
+    base = FlatParams.from_arrays(_f32_arrays(seed=41))
+    _, sparse = _sparse_results(3, 42, base)
+    acc = make_strategy("fedmedian").fit_accumulator(1, base.to_arrays())
+    with pytest.raises(ValueError, match="dense per-client"):
+        for node, r in sparse:
+            acc.add(node, r)
+
+
+@pytest.mark.pallas
+def test_sparse_fold_pallas_backend_matches_numpy_bitwise():
+    """The jitted scatter chain (f64(f32(f64(int8)·f64(scale)))·w) must
+    reproduce the numpy fold bit for bit — same contract as the dense
+    Pallas lanes."""
+    base = FlatParams.from_arrays(_f32_arrays(seed=43))
+    _, sparse = _sparse_results(5, 44, base, frac=0.15)
+    outs = {}
+    for backend in ("numpy", "pallas"):
+        s = K.StreamingWeightedSum(base.layout, backend=backend)
+        for _, r in sparse:
+            s.add(r.sparse, float(r.num_examples))
+        outs[backend] = s.finalize().math_view().copy()
+    np.testing.assert_array_equal(outs["pallas"], outs["numpy"])
+
+
+@pytest.mark.pallas
+def test_scatter_wsum_matches_host_dequant_chain():
+    from repro.kernels.agg_reduce import scatter_wsum
+    from repro.fl.flat import quantize_int8
+
+    rng = np.random.default_rng(45)
+    n, nnz = 8192, 700
+    x = rng.normal(0, 1e-2, size=nnz).astype(np.float32)
+    q, scales = quantize_int8(x)
+    dest = np.sort(rng.choice(n, size=nnz, replace=False)).astype(np.int64)
+    w = 3.5
+    acc = np.zeros(n, np.float64)
+    scatter_wsum(acc, dest, q, w, scales=scales)
+    sp = SparseDelta(layout_of([np.empty(n, np.float32)]), "coo", dest, q,
+                     scales=scales)
+    want = np.zeros(n, np.float64)
+    buf = np.empty(nnz, np.float64)
+    want[dest] = sp.dequant_packed(0, nnz, buf) * w
+    np.testing.assert_array_equal(acc, want)
+
+
+# ---------------------------------------------------------------------------
+# negotiation ladder
+# ---------------------------------------------------------------------------
+class _FakeDriver:
+    def __init__(self, nodes, on_properties):
+        self.nodes = nodes
+        self.on_properties = on_properties
+
+    def node_ids(self):
+        return list(self.nodes)
+
+    def send_and_receive_iter(self, tasks, timeout):
+        from repro.fl.messages import (TaskRes, decode_task_ins,
+                                       encode_task_res)
+        for node, tb in sorted(tasks.items()):
+            t = decode_task_ins(tb)
+            payload, error = self.on_properties(node)
+            yield node, encode_task_res(TaskRes(
+                t.task_type, t.round, payload, task_id=t.task_id,
+                error=error))
+
+
+def _negotiate(on_properties, strategy=None):
+    from repro.fl.server import ServerApp, ServerConfig
+    from repro.fl.strategy import FedAvg
+
+    app = ServerApp(ServerConfig(codec="sparse"), strategy or FedAvg())
+    return app._negotiate_codec(_FakeDriver(["a", "b"], on_properties),
+                                ["a", "b"])
+
+
+def test_negotiation_picks_sparse_when_fleet_advertises():
+    from repro.fl.messages import encode_properties_res
+    ok = encode_properties_res({"codecs": ["flat", "q8", "sparse"]})
+    assert _negotiate(lambda node: (ok, "")) == ("sparse", "")
+
+
+def test_negotiation_demotes_sparse_to_q8_not_flat():
+    """A node without sparse but with q8 keeps the int8-delta rung; the
+    note names the culprit."""
+    from repro.fl.messages import encode_properties_res
+    new = encode_properties_res({"codecs": ["flat", "q8", "sparse"]})
+    mid = encode_properties_res({"codecs": ["flat", "q8"]})
+    codec, note = _negotiate(lambda n: (new if n == "a" else mid, ""))
+    assert codec == "q8" and "b" in note and "sparse" in note
+
+
+def test_negotiation_demotes_sparse_to_flat_when_no_q8():
+    from repro.fl.messages import encode_properties_res
+    new = encode_properties_res({"codecs": ["flat", "q8", "sparse"]})
+    old = encode_properties_res({"codecs": ["flat", "legacy"]})
+    codec, note = _negotiate(lambda n: (new if n == "a" else old, ""))
+    assert codec == "flat" and "b" in note
+
+
+def test_negotiation_pre_demotes_sparse_for_stacked_strategies():
+    """FedMedian cannot fold scattered deltas — the server asks the fleet
+    for q8 instead, before any fit round."""
+    from repro.fl.messages import encode_properties_res
+    ok = encode_properties_res({"codecs": ["flat", "q8", "sparse"]})
+    codec, note = _negotiate(lambda node: (ok, ""),
+                             strategy=make_strategy("fedmedian"))
+    assert codec == "q8" and "strategy" in note
+
+
+# ---------------------------------------------------------------------------
+# sharding salvage (itemsize bugfix)
+# ---------------------------------------------------------------------------
+@pytest.mark.shard
+@pytest.mark.skipif(len(__import__("jax").devices()) < 2,
+                    reason="salvage needs a model>1 mesh")
+def test_salvage_threshold_uses_leaf_itemsize():
+    """A 10 MB fp32 leaf (size*4 >= 8 MB) whose rules all fell back must
+    be salvage-sharded; the old hard-coded bf16 estimate (size*2 = 5 MB)
+    skipped it.  The same element count in bf16 (5 MB) stays replicated."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh
+    from repro.launch.shardings import params_shardings
+
+    mesh = Mesh(np.array(jax.devices()[:2]).reshape(1, 2),
+                ("data", "model"))
+
+    class _M:
+        class cfg:
+            fsdp_hint = True
+
+        @staticmethod
+        def axes():
+            return {"big32": (None, None), "big16": (None, None),
+                    "small32": (None, None)}
+
+        @staticmethod
+        def abstract():
+            return {
+                "big32": jax.ShapeDtypeStruct((1_250_000, 2), jnp.float32),
+                "big16": jax.ShapeDtypeStruct((1_250_000, 2), jnp.bfloat16),
+                "small32": jax.ShapeDtypeStruct((999_999, 2), jnp.float32),
+            }
+
+    sh = params_shardings(_M(), mesh)
+    assert tuple(sh["big32"].spec) == ("model", None)
+    assert all(e is None for e in sh["big16"].spec)
+    assert all(e is None for e in sh["small32"].spec)
+
+
+# ---------------------------------------------------------------------------
+# end to end
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_end_to_end_negotiated_sparse_converges_within_tolerance():
+    from repro.core import run_native
+    from repro.fl import FedAvg, ServerApp, ServerConfig
+    from repro.fl.quickstart import make_client_app
+
+    sites = ["site-1", "site-2", "site-3"]
+    h_flat = run_native(ServerApp(ServerConfig(num_rounds=2), FedAvg()),
+                        lambda s: make_client_app(s), sites)
+    h_sp = run_native(ServerApp(ServerConfig(num_rounds=2, codec="sparse",
+                                             sparse_frac=0.3), FedAvg()),
+                      lambda s: make_client_app(s), sites)
+    assert h_sp.rounds[-1].metrics["wire_codec"] == "sparse"
+    for (_, lf), (_, ls) in zip(h_flat.losses(), h_sp.losses()):
+        assert abs(lf - ls) < 0.1, (lf, ls)
+    d = max(float(np.abs(a.astype(np.float64) - b.astype(np.float64)).max())
+            for a, b in zip(h_flat.final_parameters, h_sp.final_parameters))
+    assert d < 0.1
+
+
+@pytest.mark.slow
+def test_end_to_end_adapter_ranges_client():
+    """A client that declares trainable_ranges ships ONLY those ranges:
+    outside coordinates come back bitwise identical after aggregation."""
+    from repro.core import run_native
+    from repro.fl import ClientApp, FedAvg, ServerApp, ServerConfig
+    from repro.fl.quickstart import QuickstartClient
+
+    ranges = [(0, 50), (100, 260)]
+
+    class AdapterClient(QuickstartClient):
+        def trainable_ranges(self):
+            return ranges
+
+    sites = ["site-1", "site-2"]
+    # round-0 params are pulled from the fleet via get_parameters, which
+    # is deterministic for the quickstart client — recompute the base
+    before = FlatParams.from_arrays(
+        AdapterClient("site-1").get_parameters({})).to_f64()
+    h = run_native(
+        ServerApp(ServerConfig(num_rounds=1, codec="sparse"), FedAvg()),
+        lambda s: ClientApp(lambda cid: AdapterClient(s).to_client()),
+        sites)
+    assert h.rounds[-1].metrics["wire_codec"] == "sparse"
+    got = FlatParams.from_arrays(h.final_parameters).to_f64()
+    mask = np.ones(got.size, bool)
+    changed = np.zeros(got.size, bool)
+    for a, b in ranges:
+        mask[a:b] = False
+        changed[a:b] = True
+    np.testing.assert_array_equal(got[mask], before[mask])
+    assert np.any(got[changed] != before[changed])
